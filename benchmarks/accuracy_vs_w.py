@@ -1,0 +1,26 @@
+"""Fig. 6 reproduction: inference accuracy of AES vs AFS/SFS/ideal across W,
+for GCN and GraphSAGE on small- and large-scale graphs."""
+from __future__ import annotations
+
+from benchmarks.common import emit, trained
+from repro.gnn import evaluate
+
+
+def run():
+    for model in ("gcn", "graphsage"):
+        for name, scale in [("cora", 0.5), ("ogbn-proteins", 0.004),
+                            ("reddit", 0.003)]:
+            ds, params, ideal = trained(name, model, scale=scale)
+            emit(f"fig6/{model}/{name}/ideal", 0.0, f"acc={ideal:.4f}")
+            for strat in ("aes", "afs", "sfs"):
+                for W in (8, 16, 32, 128):
+                    acc = evaluate(ds, model, params, sh_width=W,
+                                   strategy=strat)
+                    emit(f"fig6/{model}/{name}/{strat}/W{W}", 0.0,
+                         f"acc={acc:.4f},loss={ideal - acc:.4f}")
+            # quantization overlay (paper §4.2.3: loss <= 0.3%)
+            for W in (16, 128):
+                acc = evaluate(ds, model, params, sh_width=W, strategy="aes",
+                               quantize_bits=8)
+                emit(f"fig6/{model}/{name}/aes_int8/W{W}", 0.0,
+                     f"acc={acc:.4f}")

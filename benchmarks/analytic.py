@@ -1,0 +1,199 @@
+"""Analytic per-cell cost model: FLOPs, HBM bytes, and collective bytes per
+device, derived from the architecture config + the sharding rules.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts while-loop bodies
+ONCE (verified in-container: a scan of 10 matmuls reports the FLOPs of 1),
+so every scan-over-layers model undercounts by ~num_layers.  The roofline
+table therefore reports BOTH: the compiled numbers (lower bound, loop
+bodies once) and this analytic model (the napkin math the perf methodology
+uses).  Collective structure (which ops appear) still comes from the HLO.
+
+Approximations (documented):
+  * causal attention averages S/2 context per token; SWA averages
+    min(S, window)/2; decode reads the full (or window) cache;
+  * train multiplier: 4x layer FLOPs (fwd + remat-recompute + 2x bwd),
+    3x for the unrematted head; optimizer traffic ~30 B/param f32 moments;
+  * activation HBM traffic ~20 B/token/layer/d_model (bf16, a few
+    materialized intermediates) + f32 attention-score traffic;
+  * TP collective = 2 psums/layer of [tokens_local, d] (attention + mlp),
+    x2 again for backward; f32 today (bf16 is a §Perf lever);
+  * DP gradient all-reduce ~ 2x local param bytes (ring).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ArchConfig
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+DATA = {"16x16": 16, "2x16x16": 32}      # dp axes product (pod x data)
+MODEL = 16
+
+
+def _head_shardable(n_heads: int) -> bool:
+    return n_heads % MODEL == 0
+
+
+@dataclass
+class CellCost:
+    flops: float            # per device per step
+    hbm_bytes: float        # per device per step
+    coll_bytes: float       # per device per step
+    params_global: int
+    notes: str = ""
+
+
+def _attn_flops_per_tok(cfg: ArchConfig, s_eff: float) -> float:
+    hd = cfg.resolved_head_dim
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    if cfg.mla is not None:
+        m = cfg.mla
+        proj = 2 * (d * m.q_lora_rank
+                    + m.q_lora_rank * H * (m.nope_head_dim + m.rope_head_dim)
+                    + d * (m.kv_lora_rank + m.rope_head_dim)
+                    + m.kv_lora_rank * H * (m.nope_head_dim + m.v_head_dim)
+                    + H * m.v_head_dim * d)
+        core = 4 * H * (m.nope_head_dim + m.rope_head_dim) * s_eff \
+            + 4 * H * m.v_head_dim * s_eff
+        return proj + core
+    proj = 2 * d * hd * (2 * H + 2 * KV)
+    core = 4 * H * hd * s_eff
+    return proj + core
+
+
+def _ff_flops_per_tok(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    if cfg.moe is not None:
+        m = cfg.moe
+        active = m.top_k + m.num_shared_experts
+        return 2 * d * m.num_experts + active * 6 * d * m.d_ff_expert
+    if cfg.d_ff:
+        return 6 * d * cfg.d_ff
+    return 0.0
+
+
+def _mamba_flops_per_tok(cfg: ArchConfig, chunk: int = 128) -> float:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    H = cfg.num_heads
+    hd = inner // H
+    proj = 2 * d * (2 * inner + 2 * n + H) + 2 * inner * d
+    # chunked SSD: per token ~ chunk-local attention + boundary state work
+    ssd = 2 * chunk * (n + H * hd) + 4 * n * H * hd
+    return proj + ssd
+
+
+def _mlstm_flops_per_tok(cfg: ArchConfig, chunk: int = 128) -> float:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    hd = inner // H
+    proj = 2 * d * 2 * inner + 2 * inner * 3 * inner + 2 * inner * d
+    core = 4 * H * hd * chunk + 4 * H * hd * hd  # chunk attn + state update
+    return proj + core
+
+
+def _slstm_flops_per_tok(cfg: ArchConfig) -> float:
+    d = cfg.d_model
+    hd = d // cfg.num_heads
+    return 2 * d * 4 * d + 2 * 4 * d * hd + 2 * d * d
+
+
+def _layer_flops_per_tok(cfg: ArchConfig, kind: str, s_eff: float) -> float:
+    if kind == "attn":
+        return _attn_flops_per_tok(cfg, s_eff) + _ff_flops_per_tok(cfg)
+    if kind == "shared_attn":
+        return _attn_flops_per_tok(cfg, s_eff) + 6 * cfg.d_model * cfg.d_ff
+    if kind == "mamba":
+        return _mamba_flops_per_tok(cfg)
+    if kind == "mlstm":
+        return _mlstm_flops_per_tok(cfg)
+    if kind == "slstm":
+        return _slstm_flops_per_tok(cfg)
+    raise ValueError(kind)
+
+
+def _blocks(cfg: ArchConfig) -> list[str]:
+    if cfg.block_pattern is not None:
+        return list(cfg.block_pattern)
+    return ["attn"] * cfg.num_layers
+
+
+def cell_cost(arch: str, shape: str, mesh: str = "16x16") -> CellCost:
+    cfg = get_config(arch)
+    seq, batch, kind = SHAPES[shape]
+    chips = CHIPS[mesh]
+    dp = DATA[mesh]
+
+    window = cfg.sliding_window
+    if kind == "train":
+        s_eff = min(seq, window or seq) / 2
+        tokens_local = seq * batch / dp      # batch sharded over dp only
+        mult_layers, mult_head = 4.0, 3.0
+    elif kind == "prefill":
+        s_eff = min(seq, window or seq) / 2
+        tokens_local = seq * batch / dp
+        mult_layers = mult_head = 1.0
+    else:  # decode
+        s_eff = min(seq, window or seq)
+        tokens_local = batch / dp if batch % dp == 0 else batch
+        mult_layers = mult_head = 1.0
+
+    d, V = cfg.d_model, cfg.vocab_size
+    blocks = _blocks(cfg)
+    layer_flops = sum(_layer_flops_per_tok(cfg, b, s_eff) for b in blocks)
+    head_flops = 2 * d * V + (0 if cfg.tie_embeddings else 0)
+
+    # TP shards the layer compute by MODEL where the rules allow it
+    shardable = (_head_shardable(cfg.num_heads) or cfg.moe is not None or
+                 cfg.mla is not None or cfg.family in ("hybrid",))
+    tp = MODEL if cfg.family != "ssm" else 1   # xlstm replicated
+    flops = tokens_local * (layer_flops * mult_layers / tp
+                            + head_flops * mult_head / MODEL)
+
+    # params
+    p_global = cfg.param_count_dense()
+    if cfg.moe is not None:  # total (not active) for storage
+        m = cfg.moe
+        p_global += cfg.num_layers * 3 * d * m.d_ff_expert * \
+            (m.num_experts - m.top_k)
+    p_local = p_global / (MODEL if cfg.family != "ssm" else 1)
+
+    if kind == "train":
+        opt_traffic = p_local * 30.0
+        act_traffic = tokens_local * len(blocks) * d * 20.0
+        score_traffic = tokens_local * cfg.num_heads / tp * s_eff * 8.0 * \
+            sum(1 for b in blocks if "attn" in b) / max(len(blocks), 1)
+        logits_traffic = tokens_local * V / MODEL * 4 * 3
+        hbm = p_local * 4 + opt_traffic + act_traffic + score_traffic \
+            + logits_traffic
+        coll = (4 * tokens_local * d * 4.0 * len(blocks)   # TP psums (f32)
+                + 2 * p_local * 4.0                        # DP grad AR
+                + logits_traffic / 3)
+    elif kind == "prefill":
+        act_traffic = tokens_local * len(blocks) * d * 12.0
+        score_traffic = tokens_local * cfg.num_heads / tp * s_eff * 8.0
+        hbm = p_local * 2 + act_traffic + score_traffic
+        coll = 2 * tokens_local * d * 4.0 * len(blocks)
+    else:
+        if cfg.mla is not None:
+            kv_row = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+        else:
+            kv_row = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+        # cache seq axis is sharded on the model axis by the cache rules
+        n_attn = sum(1 for b in blocks if "attn" in b)
+        cache_bytes = tokens_local * n_attn * s_eff * kv_row * 2 / MODEL
+        state_bytes = 0.0
+        if cfg.ssm_state:
+            inner = cfg.ssm_expand * d
+            n_ssm = sum(1 for b in blocks if b in ("mamba",))
+            state_bytes = (batch / dp if batch % dp == 0 else batch) * \
+                n_ssm * inner * cfg.ssm_state * 4 * 2
+        hbm = p_local * 2 + cache_bytes + state_bytes
+        coll = 2 * tokens_local * d * 4.0 * len(blocks)
+
+    return CellCost(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    params_global=int(p_global),
+                    notes=f"tp={tp},s_eff={s_eff:.0f},tok/dev={tokens_local:.0f}")

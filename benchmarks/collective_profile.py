@@ -1,0 +1,102 @@
+"""Dry-run 'profiler': group per-device collective bytes by the JAX op that
+produced them (HLO metadata op_name), since there is no wall-clock trace on
+CPU.  This is the §Perf diagnosis tool: it says WHICH program construct
+owns the dominant collective traffic.
+
+    PYTHONPATH=src python -m benchmarks.collective_profile --arch xlstm-350m \
+        --shape train_4k [--multi-pod] [--top 15]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+
+def profile(arch: str, shape: str, multi_pod: bool = False, top: int = 15,
+            aes_kv: int | None = None):
+    import jax
+
+    from repro.launch.dryrun import _DTYPE_BYTES, _SHAPE_RE, build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step, args, sh, out_sh = build_cell(arch, shape, mesh, aes_kv=aes_kv)
+    with mesh:
+        compiled = jax.jit(step, in_shardings=sh,
+                           out_shardings=out_sh).lower(*args).compile()
+        text = compiled.as_text()
+
+    line_re = re.compile(
+        r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+        r"all-to-all|collective-permute)\(")
+    name_re = re.compile(r'op_name="([^"]*)"')
+    by_op = defaultdict(float)
+    by_kind = defaultdict(float)
+    for line in text.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.groups()
+        b = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            b += n * _DTYPE_BYTES.get(dt, 4)
+        nm = name_re.search(line)
+        label = nm.group(1) if nm else "?"
+        # trim to the interesting tail of the op_name path
+        label = "/".join(label.split("/")[-3:])[:110]
+        by_op[f"{kind:17s} {label}"] += b
+        by_kind[kind] += b
+
+    total = sum(by_kind.values())
+    print(f"\n{arch}/{shape} mesh={'2x16x16' if multi_pod else '16x16'} "
+          f"total collective bytes/device = {total:.3e}")
+    for k, v in sorted(by_kind.items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v:.3e}  ({v / max(total, 1):.1%})")
+    print(f"\ntop {top} sources:")
+    for k, v in sorted(by_op.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {v:.3e}  {k}")
+    return by_op, total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--aes-kv", type=int, default=None)
+    args = ap.parse_args()
+    profile(args.arch, args.shape, args.multi_pod, args.top, args.aes_kv)
+
+
+if __name__ == "__main__":
+    main()
+
+
+def dump_lines(arch: str, shape: str, multi_pod: bool = False,
+               pattern: str = "all-reduce", limit: int = 20, **kw):
+    """Print raw HLO collective lines (shape + metadata) for inspection."""
+    import jax
+
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step, args, sh, out_sh = build_cell(arch, shape, mesh, **kw)
+    with mesh:
+        text = jax.jit(step, in_shardings=sh,
+                       out_shardings=out_sh).lower(*args).compile().as_text()
+    n = 0
+    for line in text.splitlines():
+        if f" {pattern}(" in line and "=" in line:
+            print(line.strip()[:260])
+            n += 1
+            if n >= limit:
+                break

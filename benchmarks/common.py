@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: timing, CSV emission, trained-model cache."""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:
+    """Median wall-time in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+@lru_cache(maxsize=None)
+def trained(dataset: str, model: str, scale: float = 0.004, seed: int = 1):
+    from repro.gnn import make_dataset, train_model
+
+    ds = make_dataset(dataset, scale=scale, seed=seed)
+    params, ideal = train_model(ds, model, epochs=120, seed=seed)
+    return ds, params, ideal

@@ -1,0 +1,55 @@
+"""Pallas kernel BlockSpec sweep (DESIGN.md §2: the TPU analogue of the
+paper's CUDA occupancy knob).
+
+No wall-clock on CPU, so the sweep is structural, per (block_r, block_f, W):
+
+  * VMEM working set: sampled val/col tiles + double-buffered B-row stage +
+    output tile — must fit 16 MB v5e VMEM with headroom;
+  * DMA descriptor economy: the gather issues block_r x live_w row copies
+    per (row-tile x feature-tile); larger block_f amortizes each descriptor
+    over more lanes, and the AES granularity N is exactly the paper's
+    "fewer index computations" reborn as fewer descriptors (DESIGN.md §2);
+  * MXU/VPU alignment: block_f must be a lane multiple (128).
+
+Emits one row per config; the chosen defaults (block_r=8, block_f=128)
+and the preferred large-graph config are derived here.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+VMEM = 16 * 2**20
+LANE = 128
+
+
+def vmem_bytes(block_r: int, block_f: int, W: int, quantized: bool) -> int:
+    val_col = block_r * W * (4 + 4)
+    stage = 2 * block_f * (1 if quantized else 4)
+    out = block_r * block_f * 4
+    return val_col + stage + out
+
+
+def run():
+    best = None
+    for W in (16, 128, 1024):
+        for block_r in (4, 8, 16, 64):
+            for block_f in (128, 256, 512):
+                for quant in (False, True):
+                    b = vmem_bytes(block_r, block_f, W, quant)
+                    fits = b < VMEM * 0.8
+                    # descriptors per output element: 1/(block_f lanes)
+                    desc_per_out = 1.0 / block_f
+                    # bytes moved per descriptor (gather efficiency)
+                    bytes_per_desc = block_f * (1 if quant else 4)
+                    name = (f"kernel_blocks/W{W}/r{block_r}/f{block_f}"
+                            f"{'/int8' if quant else ''}")
+                    emit(name, 0.0,
+                         f"vmem_B={b},fits={fits},"
+                         f"bytes_per_dma={bytes_per_desc},"
+                         f"aligned={block_f % LANE == 0}")
+                    if fits and (best is None or
+                                 bytes_per_desc > best[1]):
+                        best = (name, bytes_per_desc)
+    emit("kernel_blocks/preferred", 0.0,
+         f"{best[0]} (largest DMA payload that fits VMEM; the AES N-"
+         f"granularity then sets descriptors per sampled row)")

@@ -1,0 +1,48 @@
+"""Fig. 7 reproduction: SpMM kernel speedup vs the cuSPARSE-role baseline.
+
+Two speed measures (CPU container, DESIGN.md §8.2):
+  * measured: wall time of the jitted JAX paths (exact CSR SpMM vs
+    AES-sampled ELL SpMM) — the compute-reduction mechanism is real on any
+    backend;
+  * modeled: FLOP ratio full_nnz / sampled_nnz — the paper's speedup driver
+    (plus locality, which the roofline analysis covers separately).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn, trained
+from repro.core.sampling import STRATEGIES
+from repro.kernels import ref
+
+
+def run():
+    for name, scale in [("cora", 0.5), ("reddit", 0.003),
+                        ("ogbn-proteins", 0.004)]:
+        ds, _, _ = trained(name, "gcn", scale=scale)
+        g = ds.gcn_adj
+        feats = ds.features
+        base_us = time_fn(ref.csr_spmm, g.row_ptr, g.col_ind, g.val, feats)
+        emit(f"fig7/{name}/cusparse_role", base_us, "speedup=1.00")
+        full_nnz = g.nnz
+        # GE-SpMM role: no sampling, full rows in the regular ELL layout
+        # (coalesced row caching analogue — layout change only)
+        from repro.core.graph import pad_csr_to_ell
+
+        ge = pad_csr_to_ell(g)
+        ge_us = time_fn(ref.ell_spmm_rowloop, ge.val, ge.col, feats)
+        emit(f"fig7/{name}/gespmm_role", ge_us,
+             f"speedup={base_us / ge_us:.2f},ell_width={ge.width}")
+        for strat in ("aes", "afs", "sfs"):
+            for W in (16, 128):
+                fn = STRATEGIES[strat]
+                ell_val, ell_col = fn(g.row_ptr, g.col_ind, g.val, W)
+                live = int((np.asarray(ell_val) != 0).sum())
+                spmm_us = time_fn(ref.ell_spmm_rowloop, ell_val, ell_col, feats)
+                samp_us = time_fn(lambda: fn(g.row_ptr, g.col_ind, g.val, W))
+                total = spmm_us + samp_us
+                emit(f"fig7/{name}/{strat}/W{W}", total,
+                     f"speedup={base_us / total:.2f},"
+                     f"flop_ratio={full_nnz / max(live, 1):.2f},"
+                     f"spmm_us={spmm_us:.0f},sample_us={samp_us:.0f}")

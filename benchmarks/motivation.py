@@ -1,0 +1,39 @@
+"""Fig. 2/3 reproduction (motivation): the AFS/SFS accuracy-speed imbalance
+and the loading-vs-compute breakdown that motivates quantization."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, time_fn, trained
+from repro.core.sampling import STRATEGIES
+from repro.gnn import evaluate
+from repro.kernels import ref
+
+
+def run():
+    ds, params, ideal = trained("ogbn-proteins", "gcn", scale=0.004)
+    g = ds.gcn_adj
+    feats = ds.features
+    for W in (8, 32, 128):
+        row = {}
+        for strat in ("afs", "sfs"):
+            acc = evaluate(ds, "gcn", params, sh_width=W, strategy=strat)
+            fn = STRATEGIES[strat]
+            us = time_fn(lambda: ref.ell_spmm_rowloop(
+                *fn(g.row_ptr, g.col_ind, g.val, W), feats))
+            row[strat] = (acc, us)
+        emit(f"fig2/proteins/W{W}", 0.0,
+             f"afs_acc={row['afs'][0]:.4f},sfs_acc={row['sfs'][0]:.4f},"
+             f"afs_us={row['afs'][1]:.0f},sfs_us={row['sfs'][1]:.0f}")
+
+    # Fig. 3: loading vs compute breakdown
+    x = np.asarray(feats)
+    load_us = time_fn(lambda: jax.device_put(x))
+    for W in (8, 128):
+        fn = STRATEGIES["afs"]
+        comp_us = time_fn(lambda: ref.ell_spmm_rowloop(
+            *fn(g.row_ptr, g.col_ind, g.val, W), feats))
+        pct = 100 * load_us / (load_us + comp_us)
+        emit(f"fig3/proteins/W{W}", comp_us,
+             f"load_us={load_us:.0f},load_pct={pct:.1f}")

@@ -1,0 +1,164 @@
+"""Roofline analysis over the dry-run artifacts (deliverable (g)).
+
+Reads artifacts/dryrun/<arch>__<shape>__<mesh>.json and derives, per cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        (197 TF bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+    collective term = collective_bytes_per_device / ICI_bw      (50 GB/s/link)
+
+(the dry-run HLO is the post-SPMD *per-device* module, so all three
+numerators are already per-chip — no further division by chip count).
+
+Also reports MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPS, the dominant term, and a
+one-line "what would move it" note.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops_per_device(rec: dict) -> float:
+    from repro.configs import get_config
+
+    cfg = get_config(rec["arch"])
+    n_active = cfg.param_count_dense()
+    chips = _CHIPS[rec["mesh"]]
+    if rec["kind"] == "train":
+        tokens = rec["seq"] * rec["batch"]
+        return 6.0 * n_active * tokens / chips
+    if rec["kind"] == "prefill":
+        tokens = rec["seq"] * rec["batch"]
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence + attention reads (not in 2ND)
+    return 2.0 * n_active * rec["batch"] / chips
+
+
+def analyze(rec: dict) -> dict:
+    """Three-term roofline.  Primary terms come from the ANALYTIC model
+    (benchmarks/analytic.py) because XLA cost_analysis counts while-loop
+    (scan) bodies once — the compiled numbers are kept as lower bounds."""
+    from benchmarks.analytic import cell_cost
+
+    cc = cell_cost(rec["arch"], rec["shape"], rec["mesh"])
+    ct = cc.flops / PEAK_FLOPS
+    mt = cc.hbm_bytes / HBM_BW
+    xt = cc.coll_bytes / ICI_BW
+    # compiled lower bounds
+    ct_h = rec["flops_per_device"] / PEAK_FLOPS
+    mt_h = rec["bytes_accessed_per_device"] / HBM_BW
+    xt_h = rec["collective_bytes_per_device"].get("total", 0) / ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": xt}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = mf / cc.flops if cc.flops else 0.0
+    step_time = max(terms.values())
+    frac = mf / (step_time * PEAK_FLOPS) if step_time else 0.0
+    return {**rec, "compute_s": ct, "memory_s": mt, "collective_s": xt,
+            "hlo_compute_s": ct_h, "hlo_memory_s": mt_h,
+            "hlo_collective_s": xt_h,
+            "dominant": dom, "model_flops_per_device": mf,
+            "useful_ratio": useful, "roofline_frac": frac,
+            "analytic_notes": cc.notes}
+
+
+_NOTES = {
+    "compute": ("compute-bound: raise MFU by cutting non-model FLOPs "
+                "(remat recompute, f32 upcasts) or overlapping collectives"),
+    "memory": ("HBM-bound: shrink bytes/step — bf16 activations & "
+               "collectives, fuse elementwise chains, larger per-step "
+               "arithmetic intensity (bigger per-device batch)"),
+    "collective": ("ICI-bound: reshard to cut cross-shard traffic (bf16 "
+                   "collectives, fewer resharding hops, hierarchical "
+                   "reduce, overlap with compute)"),
+}
+
+
+def load(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r["mesh"] != mesh:
+            continue
+        if "variant" in r:   # §Perf variants live in their own section
+            continue
+        recs.append(r)
+    return recs
+
+
+def table(mesh: str = "16x16", md: bool = False) -> str:
+    rows = []
+    for r in load(mesh):
+        if r["status"] == "SKIP":
+            rows.append((r["arch"], r["shape"], "SKIP", "", "", "", "", "", ""))
+            continue
+        if r["status"] != "OK":
+            rows.append((r["arch"], r["shape"], "FAIL", "", "", "", "", "", ""))
+            continue
+        a = analyze(r)
+        rows.append((a["arch"], a["shape"], a["dominant"],
+                     f"{a['compute_s'] * 1e3:.2f}",
+                     f"{a['memory_s'] * 1e3:.2f}",
+                     f"{a['collective_s'] * 1e3:.2f}",
+                     f"{a['useful_ratio']:.2f}",
+                     f"{a['roofline_frac']:.3f}",
+                     f"{a['memory']['peak_bytes'] or 0:.2e}" if isinstance(
+                         a.get("memory"), dict) else ""))
+    hdr = ("arch", "shape", "bound", "compute_ms", "hbm_ms", "ici_ms",
+           "useful", "roofline", "peak_B/dev")
+    w = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    sep = " | " if md else "  "
+    lines = [sep.join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+    if md:
+        lines = ["| " + lines[0] + " |",
+                 "|" + "|".join("-" * (x + 2) for x in w) + "|"]
+        lines += ["| " + sep.join(str(c).ljust(w[i])
+                                  for i, c in enumerate(r)) + " |"
+                  for r in rows]
+    else:
+        lines += [sep.join(str(c).ljust(w[i]) for i, c in enumerate(r))
+                  for r in rows]
+    return "\n".join(lines)
+
+
+def report():
+    """CSV rows for benchmarks.run."""
+    for r in load():
+        if r["status"] != "OK":
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+                  f"status={r['status']}")
+            continue
+        a = analyze(r)
+        step_ms = max(a["compute_s"], a["memory_s"], a["collective_s"]) * 1e3
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{step_ms * 1e3:.2f},"
+              f"bound={a['dominant']},useful={a['useful_ratio']:.2f},"
+              f"roofline_frac={a['roofline_frac']:.3f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    print(table(args.mesh, md=args.md))
+    print()
+    print("notes by bound:")
+    for k, v in _NOTES.items():
+        print(f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Benchmark driver: one module per paper table/figure.  Prints
+``name,us_per_call,derived`` CSV rows (plus roofline rows when the dry-run
+artifacts exist)."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (accuracy_vs_w, kernel_blocks, kernel_speedup,
+                            motivation, quant_loading, sampling_cdf)
+
+    print("name,us_per_call,derived")
+    sampling_cdf.run()
+    accuracy_vs_w.run()
+    kernel_speedup.run()
+    quant_loading.run()
+    motivation.run()
+    kernel_blocks.run()
+    try:
+        from benchmarks import roofline
+        roofline.report()
+    except (ImportError, FileNotFoundError) as e:
+        print(f"roofline/skipped,0.0,reason={type(e).__name__}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end GNN driver (the paper's evaluation protocol, §4):
+
+  1. train GCN + GraphSAGE with the exact kernel (ideal accuracy),
+  2. inference with AES-SpMM / ES-SpMM(AFS, SFS) across W,
+  3. INT8-quantized features on top of AES.
+
+    PYTHONPATH=src python examples/gnn_inference.py [dataset] [scale]
+"""
+import sys
+
+from repro.gnn import evaluate, make_dataset, train_model
+
+dataset = sys.argv[1] if len(sys.argv) > 1 else "ogbn-proteins"
+scale = float(sys.argv[2]) if len(sys.argv) > 2 else 0.004
+
+ds = make_dataset(dataset, scale=scale, seed=1)
+print(f"{dataset}: {ds.csr.num_rows} nodes, {ds.csr.nnz} edges "
+      f"(scale={scale} of Table-2 size)\n")
+
+for model in ("gcn", "graphsage"):
+    params, ideal = train_model(ds, model, epochs=120, seed=1)
+    print(f"== {model.upper()} | ideal (exact kernel) accuracy: {ideal:.4f}")
+    print(f"{'strategy':>10} " + " ".join(f"W={w:<5}" for w in (8, 16, 64, 128)))
+    for strat in ("aes", "afs", "sfs"):
+        accs = [evaluate(ds, model, params, sh_width=w, strategy=strat)
+                for w in (8, 16, 64, 128)]
+        print(f"{strat:>10} " + " ".join(f"{a:.4f}" for a in accs))
+    q = [evaluate(ds, model, params, sh_width=w, strategy="aes",
+                  quantize_bits=8) for w in (8, 16, 64, 128)]
+    print(f"{'aes+int8':>10} " + " ".join(f"{a:.4f}" for a in q))
+    print()

@@ -1,0 +1,2 @@
+"""repro: AES-SpMM (adaptive edge sampling SpMM) in JAX/Pallas, framework-scale."""
+__version__ = "1.0.0"

@@ -1,0 +1,70 @@
+"""Public AES-SpMM API: the paper's contribution as one composable call.
+
+    aes_spmm(csr, features, sh_width=128,
+             strategy="aes" | "afs" | "sfs" | "full",
+             backend="ref" | "jax" | "pallas" | "pallas_fused",
+             quantized=None | QuantizedFeatures)
+
+``strategy`` selects the paper's adaptive scheme or the ES-SpMM baselines;
+``"full"`` disables sampling (cuSPARSE/GE-SpMM role).  ``backend`` selects
+the execution path; all paths agree to float tolerance (tests assert it).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import CSR, ELL, pad_csr_to_ell
+from repro.core.quantization import QuantizedFeatures, dequantize
+from repro.core.sampling import STRATEGIES
+
+
+def sample(csr: CSR, sh_width: int, strategy: str = "aes",
+           backend: str = "jax") -> ELL:
+    """Sampling pre-pass producing the ELL operand."""
+    if strategy == "full":
+        return pad_csr_to_ell(csr)
+    if backend == "pallas" and strategy == "aes":
+        from repro.kernels import ops
+
+        return ops.aes_sample(csr, sh_width)
+    fn = STRATEGIES[strategy]
+    val, col = fn(csr.row_ptr, csr.col_ind, csr.val, sh_width)
+    return ELL(val, col, csr.num_cols)
+
+
+def aes_spmm(csr: CSR, features, sh_width: int = 128, *,
+             strategy: str = "aes", backend: str = "jax",
+             quantized: Optional[QuantizedFeatures] = None,
+             interpret=None):
+    """Sampled aggregation C = sample(A) @ B (paper Alg. 1 end to end)."""
+    from repro.kernels import ops, ref
+
+    if quantized is not None and backend != "pallas":
+        features = dequantize(quantized)
+
+    if backend == "pallas_fused":
+        if strategy != "aes":
+            raise ValueError("fused kernel implements the AES strategy only")
+        if quantized is not None:
+            features = dequantize(quantized)
+        return ops.fused_aes_spmm(csr, features, sh_width, interpret=interpret)
+
+    ell = sample(csr, sh_width, strategy,
+                 backend="jax" if backend == "ref" else backend)
+
+    if backend == "ref":
+        return ref.ell_spmm_rowloop(ell.val, ell.col, features)
+    if backend == "jax":
+        return ref.ell_spmm_rowloop(ell.val, ell.col, features)
+    if backend == "pallas":
+        if quantized is not None:
+            # beyond-paper: dequant fused into the B-row gather
+            return ops.ell_spmm(
+                ell, quantized.q,
+                quantized_meta=(quantized.scale, quantized.x_min),
+                interpret=interpret)
+        return ops.ell_spmm(ell, features, interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}")

@@ -1,0 +1,120 @@
+"""Graph containers: CSR (paper §2.2, Fig. 1) and the ELL layout AES
+sampling produces, plus the GNN normalizations the models need.
+
+CSR uses the standard three arrays (row_ptr, col_ind, val).  AES-SpMM adopts
+CSR directly ("eliminates overhead from additional format conversion"), and
+the sampler emits fixed-width ELL — the TPU-regular layout (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class CSR(NamedTuple):
+    row_ptr: jax.Array  # int32[rows + 1]
+    col_ind: jax.Array  # int32[nnz]
+    val: jax.Array      # f32[nnz]
+    num_cols: int
+
+    @property
+    def num_rows(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    @property
+    def nnz(self) -> int:
+        return self.col_ind.shape[0]
+
+    def row_nnz(self) -> jax.Array:
+        return (self.row_ptr[1:] - self.row_ptr[:-1]).astype(jnp.int32)
+
+
+class ELL(NamedTuple):
+    """Fixed-width sampled layout: row r's live entries sit in
+    ``val[r, :], col[r, :]`` with dead slots zero-valued."""
+
+    val: jax.Array  # f32[rows, W]
+    col: jax.Array  # int32[rows, W]
+    num_cols: int
+
+    @property
+    def num_rows(self) -> int:
+        return self.val.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.val.shape[1]
+
+
+def csr_from_edges(src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                   val: np.ndarray | None = None) -> CSR:
+    """Build CSR of the adjacency A[dst, src] (messages flow src -> dst,
+    aggregation is a row-gather over in-neighbors)."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    order = np.lexsort((src, dst))
+    src, dst = src[order], dst[order]
+    v = np.ones(len(src), np.float32) if val is None else np.asarray(val, np.float32)[order]
+    counts = np.bincount(dst, minlength=num_nodes)
+    row_ptr = np.zeros(num_nodes + 1, np.int32)
+    np.cumsum(counts, out=row_ptr[1:])
+    return CSR(jnp.asarray(row_ptr), jnp.asarray(src.astype(np.int32)),
+               jnp.asarray(v), num_cols=num_nodes)
+
+
+def add_self_loops(csr: CSR) -> CSR:
+    """A + I (GCN convention) — host-side rebuild."""
+    rp = np.asarray(csr.row_ptr)
+    ci = np.asarray(csr.col_ind)
+    v = np.asarray(csr.val)
+    n = csr.num_rows
+    dst = np.repeat(np.arange(n), rp[1:] - rp[:-1])
+    src = np.concatenate([ci, np.arange(n)])
+    dst = np.concatenate([dst, np.arange(n)])
+    val = np.concatenate([v, np.ones(n, np.float32)])
+    return csr_from_edges(src, dst, n, val)
+
+
+def gcn_normalize(csr: CSR, add_loops: bool = True) -> CSR:
+    """Symmetric normalization D^-1/2 (A + I) D^-1/2 (Kipf & Welling)."""
+    if add_loops:
+        csr = add_self_loops(csr)
+    rp = np.asarray(csr.row_ptr)
+    ci = np.asarray(csr.col_ind)
+    deg_in = (rp[1:] - rp[:-1]).astype(np.float64)          # row degree
+    deg_out = np.bincount(ci, minlength=csr.num_rows).astype(np.float64)
+    d_in = 1.0 / np.sqrt(np.maximum(deg_in, 1.0))
+    d_out = 1.0 / np.sqrt(np.maximum(deg_out, 1.0))
+    rows = np.repeat(np.arange(csr.num_rows), rp[1:] - rp[:-1])
+    val = (np.asarray(csr.val) * d_in[rows] * d_out[ci]).astype(np.float32)
+    return CSR(csr.row_ptr, csr.col_ind, jnp.asarray(val), csr.num_cols)
+
+
+def mean_normalize(csr: CSR) -> CSR:
+    """Row-mean normalization D^-1 A (GraphSAGE mean aggregator)."""
+    rp = np.asarray(csr.row_ptr)
+    deg = (rp[1:] - rp[:-1]).astype(np.float64)
+    rows = np.repeat(np.arange(csr.num_rows), rp[1:] - rp[:-1])
+    val = (np.asarray(csr.val) / np.maximum(deg, 1.0)[rows]).astype(np.float32)
+    return CSR(csr.row_ptr, csr.col_ind, jnp.asarray(val), csr.num_cols)
+
+
+def csr_to_dense(csr: CSR) -> jax.Array:
+    rows = jnp.repeat(jnp.arange(csr.num_rows), csr.row_nnz(),
+                      total_repeat_length=csr.nnz)
+    dense = jnp.zeros((csr.num_rows, csr.num_cols), csr.val.dtype)
+    return dense.at[rows, csr.col_ind].add(csr.val)
+
+
+def pad_csr_to_ell(csr: CSR, width: int | None = None) -> ELL:
+    """No-sampling ELL: every row padded to max row_nnz (GE-SpMM-role
+    baseline keeps all edges; only the layout changes)."""
+    nnz = np.asarray(csr.row_nnz())
+    w = int(nnz.max()) if width is None else width
+    from .sampling import sample_csr_to_ell_sfs  # first-W == all when w >= max nnz
+
+    val, col = sample_csr_to_ell_sfs(csr.row_ptr, csr.col_ind, csr.val, w)
+    return ELL(val, col, csr.num_cols)

@@ -1,0 +1,82 @@
+"""Scalar feature quantization (paper §2.3 / §3.1, Eq. 1-2).
+
+Features are quantized *offline* with a single global (x_min, x_max) pair to
+``b``-bit unsigned integers (paper uses INT8, b=8), stored/loaded in the
+compact dtype, and dequantized on the accelerator before aggregation:
+
+    q    = floor((x - x_min) / (x_max - x_min) * (2^b - 1))        (Eq. 1)
+    x^   = q * (x_max - x_min) / (2^b - 1) + x_min                 (Eq. 2)
+
+Lossy by construction; the paper measures <= 0.3% accuracy impact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedFeatures(NamedTuple):
+    """Offline-quantized feature matrix + the dequantization constants that
+    the paper stores alongside the graph ("pre-saved x_min and x_max")."""
+
+    q: jax.Array        # uint8/uint16[nodes, feat]
+    x_min: jax.Array    # f32 scalar
+    x_max: jax.Array    # f32 scalar
+    bits: int
+
+    @property
+    def scale(self) -> jax.Array:
+        return (self.x_max - self.x_min) / (2**self.bits - 1)
+
+
+def storage_dtype(bits: int):
+    if bits <= 8:
+        return jnp.uint8
+    if bits <= 16:
+        return jnp.uint16
+    return jnp.uint32
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _quantize(x, x_min, x_max, bits: int):
+    levels = 2**bits - 1
+    span = jnp.maximum(x_max - x_min, jnp.finfo(x.dtype).tiny)
+    q = jnp.floor((x - x_min) / span * levels)
+    return jnp.clip(q, 0, levels).astype(storage_dtype(bits))
+
+
+def quantize(x: jax.Array, bits: int = 8) -> QuantizedFeatures:
+    """Offline quantization (Eq. 1) with global min/max over the feature set."""
+    x = jnp.asarray(x, jnp.float32)
+    x_min = x.min()
+    x_max = x.max()
+    return QuantizedFeatures(q=_quantize(x, x_min, x_max, bits), x_min=x_min,
+                             x_max=x_max, bits=bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "dtype"))
+def dequantize_arrays(q, x_min, x_max, bits: int, dtype=jnp.float32):
+    """Eq. 2 on raw arrays (used by the Pallas dequant kernel's oracle)."""
+    scale = (x_max - x_min) / (2**bits - 1)
+    return (q.astype(dtype) * scale + x_min).astype(dtype)
+
+
+def dequantize(qf: QuantizedFeatures, dtype=jnp.float32) -> jax.Array:
+    return dequantize_arrays(qf.q, qf.x_min, qf.x_max, qf.bits, dtype)
+
+
+def quantization_error(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Max abs reconstruction error; bounded by one quantization step."""
+    qf = quantize(x, bits)
+    return jnp.max(jnp.abs(dequantize(qf) - jnp.asarray(x, jnp.float32)))
+
+
+def loading_bytes(num_nodes: int, feat: int, bits: int | None) -> int:
+    """Bytes moved when loading the feature matrix — the quantity the paper's
+    Table 3 improves.  ``bits=None`` means raw Float32."""
+    if bits is None:
+        return num_nodes * feat * 4
+    return num_nodes * feat * jnp.dtype(storage_dtype(bits)).itemsize

@@ -1,0 +1,3 @@
+from repro.data.pipeline import TokenPipeline, make_pipeline
+
+__all__ = ["TokenPipeline", "make_pipeline"]

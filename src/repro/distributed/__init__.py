@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        dp_axes, opt_shardings,
+                                        param_shardings)
+
+__all__ = ["batch_shardings", "cache_shardings", "dp_axes", "opt_shardings",
+           "param_shardings"]

@@ -1,0 +1,249 @@
+"""Sharding rules: map parameter / batch / cache pytrees to NamedShardings
+on the production mesh (DP on (pod, data), TP/EP/SP on model).
+
+Every rule is divisibility-checked: if a tensor dimension does not divide
+the mesh axis it would shard over, the rule falls back (usually to
+replication for that dim).  This is what makes one rule set serve all ten
+architectures — e.g. qwen2-7b's 28 heads don't divide the 16-way model
+axis, so its attention runs with replicated weights while its 18944-wide
+FFN (the dominant compute) shards cleanly; gemma's 16 heads shard on the
+head axis directly.  Decisions are recorded per-arch by the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """axes if dim divides their product, else None."""
+    return axes if dim % _size(mesh, axes) == 0 else None
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(f"[{p.idx}]")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _param_spec(names: list[str], shape: tuple[int, ...], mesh: Mesh) -> P:
+    name = names[-1]
+    # scan-stacked leading axes: "layers" adds 1, grouped-hybrid "groups"
+    # adds 2 (group, position-in-group), "tail" adds 1
+    lead = 0
+    if "layers" in names or "tail" in names:
+        lead = 1
+    elif "groups" in names:
+        lead = 2 if "mamba" in names else 1  # group norms: [G, per+1, d]
+    if name == "norms":                      # grouped norms: replicate all
+        return P(*([None] * len(shape)))
+    base = shape[lead:]
+
+    def out(*spec):
+        full = (None,) * lead + spec
+        assert len(full) == len(shape), (names, shape, full)
+        return P(*full)
+
+    m = MODEL
+    # embeddings / head
+    if name == "embed":
+        return out(_fit(mesh, base[0], m), None)
+    if name == "lm_head":
+        return out(None, _fit(mesh, base[1], m))
+    # norms / small vectors / gates
+    if name in ("ln1", "ln2", "final_norm", "q_norm", "kv_norm",
+                "A_log", "D", "dt_bias", "block_norms", "r"):
+        return out(*([None] * len(base)))
+    # attention (3-D head-major)
+    if name in ("wq", "wk", "wv"):
+        return out(None, _fit(mesh, base[1], m), None)
+    if name in ("bq", "bk", "bv"):
+        return out(_fit(mesh, base[0], m), None)
+    if name == "wo":
+        return out(_fit(mesh, base[0], m), None, None)
+    # MLA
+    if name in ("w_dq", "w_dkv"):
+        return out(None, None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        return out(None, _fit(mesh, base[1], m), None)
+    # dense MLP (also MoE shared experts / zamba shared mlp)
+    if name in ("w_gate", "w_up"):
+        if len(base) == 3:  # MoE experts [E, d, f] -> EP on experts
+            ep = _fit(mesh, base[0], m)
+            return out(ep, None, None if ep else _fit(mesh, base[2], m))
+        return out(None, _fit(mesh, base[1], m))
+    if name == "w_down":
+        if len(base) == 3:
+            ep = _fit(mesh, base[0], m)
+            return out(ep, None if ep else _fit(mesh, base[1], m), None)
+        return out(_fit(mesh, base[0], m), None)
+    if name == "router":
+        return out(None, None)
+    # mamba (head-major)
+    if name in ("w_z", "w_x"):
+        return out(None, _fit(mesh, base[1], m), None)
+    if name in ("w_B", "w_C", "w_dt", "conv_B", "conv_C"):
+        return out(*([None] * len(base)))
+    if name == "conv_x":
+        return out(None, _fit(mesh, base[1], m), None)
+    if name == "norm":  # mamba/xlstm norm [H, hd] or [inner]
+        if len(base) == 2:
+            return out(_fit(mesh, base[0], m), None)
+        return out(None)
+    if name == "w_out":
+        if len(base) == 3:
+            return out(_fit(mesh, base[0], m), None, None)
+        return out(_fit(mesh, base[0], m), None)
+    # xlstm fused projections: replicated (350M model — pure DP; sharding
+    # the fused q|k|v out-dim would fight the later split boundaries)
+    if name in ("w_qkv", "w_if", "w_in"):
+        return out(None, None)
+    # default: replicate
+    return out(*([None] * len(base)))
+
+
+def param_shardings(mesh: Mesh, params_tree) -> Any:
+    """params_tree: pytree of arrays or ShapeDtypeStructs."""
+    def rule(path, leaf):
+        spec = _param_spec(_path_names(path), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def opt_shardings(mesh: Mesh, opt_tree, zero1: bool = False) -> Any:
+    """AdamW state: step replicated; mu/nu follow the param rules, PLUS
+    (zero1) an extra shard over the DP axes on the first still-replicated
+    divisible dim — ZeRO-1.  XLA then reduce-scatters gradients into the
+    moment update and all-gathers fresh params, cutting optimizer memory
+    by the DP degree (the 236B-param MoE train cell does not fit HBM
+    without this)."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        if leaf.ndim == 0 or (names and names[0] == "step"):
+            return NamedSharding(mesh, P())
+        spec = _param_spec(names[1:] if len(names) > 1 else names,
+                           leaf.shape, mesh)
+        if zero1:
+            parts = list(spec) + [None] * (leaf.ndim - len(spec))
+            for i, dim in enumerate(leaf.shape):
+                if parts[i] is None and dim % _size(mesh, dp) == 0:
+                    parts[i] = dp
+                    break
+            spec = P(*parts)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, opt_tree)
+
+
+# ---------------------------------------------------------------------------
+# batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_tree) -> Any:
+    """tokens/labels [B,S]; embeds [B,S,d] — batch over DP axes."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        axes = dp if (leaf.ndim and b % _size(mesh, dp) == 0) else None
+        spec = (axes,) + (None,) * (leaf.ndim - 1) if leaf.ndim else ()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree, stacked: bool,
+                    prefer_heads: bool = False) -> Any:
+    """KV/state caches.  Batch -> DP when divisible; the long sequence axis
+    -> model (plus the DP axes too when batch is unshardable, e.g. the
+    batch-1 long_500k cell: classic sequence parallelism).
+
+    prefer_heads (§Perf H4b): shard the KV-head axis instead of sequence
+    when it divides the model axis — position gathers (AES-KV sampling,
+    ring-buffer reads) then stay shard-local instead of crossing shards."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        # dims are identified from the END so any number of leading
+        # stack axes (L, or [G] / [G, per]) is handled uniformly
+        if name in ("k", "v"):                 # [..., B, S, KV, hd]
+            b_dim, s_dim = len(shape) - 4, len(shape) - 3
+            if prefer_heads and shape[-2] % _size(mesh, MODEL) == 0:
+                spec[len(shape) - 2] = MODEL
+                s_dim = None
+        elif name in ("k_scale", "v_scale"):   # [..., B, S, KV]
+            b_dim, s_dim = len(shape) - 3, len(shape) - 2
+            if prefer_heads and shape[-1] % _size(mesh, MODEL) == 0:
+                spec[len(shape) - 1] = MODEL
+                s_dim = None
+        elif name in ("c_kv", "k_pe"):         # [..., B, S, r]
+            b_dim, s_dim = len(shape) - 3, len(shape) - 2
+        elif name == "state":                  # [..., B, H, hd, n]
+            b_dim, s_dim = len(shape) - 4, None
+            spec[len(shape) - 3] = _fit(mesh, shape[-3], MODEL)
+        elif name == "C" and "conv" not in names:  # mlstm [..., B,H,hd,hd+1]
+            b_dim, s_dim = len(shape) - 4, None
+        elif name == "x" and len(shape) >= 4:  # conv cache [..., B, K-1, H, hd]
+            b_dim, s_dim = len(shape) - 4, None
+            spec[len(shape) - 2] = _fit(mesh, shape[-2], MODEL)
+        elif name in ("B", "C", "c", "n", "h") or len(shape) >= 2:
+            b_dim = len(shape) - (3 if name in ("B", "C") else 2)
+            s_dim = None
+            b_dim = max(b_dim, 0)
+        else:
+            b_dim, s_dim = 0, None
+        b_ax = dp if shape[b_dim] % _size(mesh, dp) == 0 else None
+        spec[b_dim] = b_ax
+        if s_dim is not None:
+            s_axes = MODEL if b_ax else tuple(dp) + (MODEL,)
+            spec[s_dim] = _fit(mesh, shape[s_dim], s_axes)
+            if spec[s_dim] is None:
+                spec[s_dim] = _fit(mesh, shape[s_dim], MODEL)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def logits_sharding(mesh: Mesh, batch: int):
+    dp = dp_axes(mesh)
+    b_ax = dp if batch % _size(mesh, dp) == 0 else None
+    return NamedSharding(mesh, P(b_ax, None, MODEL))
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())

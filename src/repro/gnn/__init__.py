@@ -1,0 +1,7 @@
+from repro.gnn.models import GCN, GraphSAGE, init_gcn, init_sage
+from repro.gnn.datasets import SYNTHETIC_DATASETS, make_dataset
+from repro.gnn.train import train_model
+from repro.gnn.infer import evaluate, inference_accuracy
+
+__all__ = ["GCN", "GraphSAGE", "init_gcn", "init_sage", "SYNTHETIC_DATASETS",
+           "make_dataset", "train_model", "evaluate", "inference_accuracy"]

@@ -1,0 +1,50 @@
+"""GNN inference harness: evaluate a trained model with any SpMM kernel /
+sampling strategy / W / quantization combination (paper §4.2 protocol)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.quantization import QuantizedFeatures, dequantize, quantize
+from repro.gnn.datasets import GraphDataset
+from repro.gnn.models import MODELS, exact_agg, make_sampled_agg
+from repro.gnn.train import accuracy
+
+
+def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
+             strategy: str = "aes", backend: str = "jax",
+             quantize_bits: Optional[int] = None) -> float:
+    """Test accuracy under the given kernel configuration."""
+    _, fwd, adj_name = MODELS[model]
+    adj = getattr(ds, adj_name)
+    feats = ds.features
+    quantized = None
+    if quantize_bits is not None:
+        quantized = quantize(feats, quantize_bits)
+        feats = dequantize(quantized)  # jax backends dequantize up front
+
+    if strategy == "full":
+        agg = exact_agg
+    else:
+        agg = make_sampled_agg(sh_width, strategy, backend,
+                               quantized if backend == "pallas" else None)
+
+    logits = fwd(params, adj, feats, agg)
+    return float(accuracy(logits, ds.labels,
+                          ds.test_mask.astype(jnp.float32)))
+
+
+def inference_accuracy(ds: GraphDataset, model: str, params,
+                       strategies=("full", "aes", "afs", "sfs"),
+                       widths=(16, 32, 64, 128, 256), backend="jax"):
+    """Accuracy grid reproducing Fig. 6's sweep."""
+    out = {}
+    for s in strategies:
+        if s == "full":
+            out[("full", 0)] = evaluate(ds, model, params, strategy="full")
+            continue
+        for w in widths:
+            out[(s, w)] = evaluate(ds, model, params, sh_width=w,
+                                   strategy=s, backend=backend)
+    return out

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the AES-SpMM hot paths, with pure-jnp oracles."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: standalone AES sampling pre-pass (CSR -> ELL).
+
+The sampling half of Algorithm 1 as its own kernel, for pipelines that
+sample once and reuse the ELL across layers (both GCN layers aggregate with
+the same A, so sampling once amortizes — the paper's kernel resamples per
+call; this is a beyond-paper amortization, see EXPERIMENTS.md §Perf).
+
+Output tiles are the same ``sh_val/sh_col`` staging the fused kernel keeps
+in VMEM scratch, but written out to HBM in ELL layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sampling import PRIME_NUM
+
+from .fused_spmm import _strategy_scalar
+
+
+def _sample_kernel(rs_ref, nnz_ref, ci_ref, av_ref, val_out, col_out,
+                   stage_i, stage_f, sem, *, sh_width: int):
+    block_r = rs_ref.shape[0]
+
+    def row_body(r, _):
+        row_start = rs_ref[r, 0]
+        row_nnz = nnz_ref[r, 0]
+        W, N, cnt = _strategy_scalar(row_nnz, sh_width)
+        span = jnp.maximum(row_nnz - N + 1, 1)
+
+        pl.store(val_out, (pl.ds(r, 1), slice(None)),
+                 jnp.zeros((1, sh_width), jnp.float32))
+        pl.store(col_out, (pl.ds(r, 1), slice(None)),
+                 jnp.zeros((1, sh_width), jnp.int32))
+
+        def sample_body(i, _):
+            start = (i * PRIME_NUM) % span
+            cp_i = pltpu.make_async_copy(
+                ci_ref.at[pl.ds(row_start + start, sh_width)], stage_i, sem.at[0])
+            cp_i.start()
+            cp_i.wait()
+            cp_f = pltpu.make_async_copy(
+                av_ref.at[pl.ds(row_start + start, sh_width)], stage_f, sem.at[0])
+            cp_f.start()
+            cp_f.wait()
+
+            def elem_body(j, _):
+                slot = i + j * cnt
+                pl.store(col_out, (pl.ds(r, 1), pl.ds(slot, 1)),
+                         stage_i[j].reshape(1, 1))
+                pl.store(val_out, (pl.ds(r, 1), pl.ds(slot, 1)),
+                         stage_f[j].reshape(1, 1))
+                return _
+
+            jax.lax.fori_loop(0, jnp.minimum(N, sh_width), elem_body, None)
+            return _
+
+        @pl.when(row_nnz > 0)
+        def _():
+            jax.lax.fori_loop(0, cnt, sample_body, None)
+        return _
+
+    jax.lax.fori_loop(0, block_r, row_body, None)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sh_width", "block_r", "interpret"))
+def aes_sample(row_start, row_nnz, col_ind, val, *, sh_width: int,
+               block_r: int = 8, interpret: bool = True):
+    """Returns (ell_val, ell_col) of shape [rows, sh_width].
+
+    ``col_ind``/``val`` must carry >= sh_width padding elements at the end
+    (the fixed-size sample DMA may over-read past a row's end; over-read
+    values are masked by the slot layout, padding only prevents OOB).
+    """
+    rows = row_start.shape[0]
+    assert rows % block_r == 0
+    kernel = functools.partial(_sample_kernel, sh_width=sh_width)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, sh_width), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, sh_width), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, sh_width), jnp.float32),
+            jax.ShapeDtypeStruct((rows, sh_width), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((sh_width,), jnp.int32),
+            pltpu.VMEM((sh_width,), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(row_start.reshape(rows, 1).astype(jnp.int32),
+      row_nnz.reshape(rows, 1).astype(jnp.int32),
+      col_ind, val)

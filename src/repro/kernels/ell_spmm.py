@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: SpMM over the AES-sampled ELL layout.
+
+This is the SpMM stage of Algorithm 1 (lines 16-19), re-thought for TPU
+(DESIGN.md §2):
+
+  * the sampled ``(val, col)`` tiles are staged in **VMEM** by ``BlockSpec``
+    — the analogue of the paper's shared-memory staging;
+  * the dense feature matrix B stays in **HBM** (``MemorySpace.ANY``); each
+    referenced row slice is DMA'd into a VMEM scratch buffer with
+    ``pltpu.make_async_copy`` (the analogue of the GPU's global-memory
+    fetch ``B[sh_col[k], cid]``), double-buffered so the copy of row k+1
+    overlaps the FMA of row k;
+  * one Pallas program per (row-tile x feature-tile) replaces one CUDA
+    thread per output element; the per-row ``k in [0, live_w)`` loop is the
+    paper's ``for k <- 0 to W`` with the same dynamic bound
+    ``W = min(row_nnz, sh_width)``.
+
+A quantized variant (``quantized=True``) keeps B as uint8 in HBM and fuses
+Eq. 2 dequantization into the gather — beyond-paper: it cuts the gather's
+HBM bytes 4x, and the gather is the memory-bound hot loop on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ell_spmm_kernel(val_ref, col_ref, live_ref, b_ref, out_ref,
+                     scratch, sem, *, block_f: int, quantized: bool,
+                     scale: float, x_min: float):
+    """grid = (row_tiles, feat_tiles).
+
+    val_ref:  f32[block_r, W]   VMEM   sampled edge weights
+    col_ref:  i32[block_r, W]   VMEM   sampled column indices
+    live_ref: i32[block_r, 1]   VMEM   live width per row (= min(nnz, W))
+    b_ref:    [num_nodes, F]    HBM    dense features (f32, or uint8 if quantized)
+    out_ref:  f32[block_r, block_f] VMEM
+    scratch:  [2, 1, block_f]   VMEM   double-buffered B-row landing zone
+    sem:      DMA semaphores [2]
+    """
+    f_tile = pl.program_id(1)
+    f_start = f_tile * block_f
+    block_r = val_ref.shape[0]
+
+    def b_row_copy(c, slot):
+        return pltpu.make_async_copy(
+            b_ref.at[pl.ds(c, 1), pl.ds(f_start, block_f)],
+            scratch.at[slot],
+            sem.at[slot],
+        )
+
+    def row_body(r, _):
+        live_w = live_ref[r, 0]
+
+        @pl.when(live_w > 0)
+        def _():
+            b_row_copy(col_ref[r, 0], 0).start()
+
+        def k_body(k, acc):
+            slot = jax.lax.rem(k, 2)
+
+            @pl.when(k + 1 < live_w)
+            def _():
+                b_row_copy(col_ref[r, k + 1], jax.lax.rem(k + 1, 2)).start()
+
+            b_row_copy(col_ref[r, k], slot).wait()
+            row = scratch[slot, 0, :]
+            if quantized:
+                row = row.astype(jnp.float32) * scale + x_min
+            return acc + val_ref[r, k] * row
+
+        acc = jax.lax.fori_loop(
+            0, live_w, k_body, jnp.zeros((block_f,), jnp.float32))
+        pl.store(out_ref, (pl.ds(r, 1), slice(None)), acc[None, :])
+        return _
+
+    jax.lax.fori_loop(0, block_r, row_body, None)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_r", "block_f", "quantized", "interpret",
+                     "scale", "x_min"))
+def ell_spmm(ell_val, ell_col, live_w, b, *, block_r: int = 8,
+             block_f: int = 128, quantized: bool = False,
+             scale=1.0, x_min=0.0, interpret: bool = True):
+    """C[r, :] = sum_k ell_val[r, k] * B[ell_col[r, k], :].
+
+    Inputs must be padded: rows % block_r == 0, feat % block_f == 0
+    (``repro.kernels.ops`` handles padding).
+    """
+    rows, width = ell_val.shape
+    feat = b.shape[1]
+    assert rows % block_r == 0 and feat % block_f == 0
+
+    grid = (rows // block_r, feat // block_f)
+    scratch_dtype = b.dtype
+    kernel = functools.partial(
+        _ell_spmm_kernel, block_f=block_f, quantized=quantized,
+        scale=scale, x_min=x_min)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, width), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, width), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, block_f), scratch_dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(ell_val, ell_col, live_w.reshape(rows, 1).astype(jnp.int32), b)

@@ -1,0 +1,184 @@
+"""Pallas TPU kernel: fused adaptive-edge-sampling + SpMM (Algorithm 1).
+
+The closest structural match to the paper's kernel: sampling is performed
+*inside* the SpMM kernel, and the sampled (val, col) pairs are staged in a
+VMEM scratch tile — the direct analogue of ``__shared__ sh_val[], sh_col[]``.
+
+Per row (Alg. 1 lines 3-14):
+  W          = min(row_nnz, sh_width)
+  (N, cnt)   = strategy table from R = row_nnz / W        (Table 1)
+  start(i)   = (i * 1429) mod (row_nnz - N + 1)           (Eq. 3)
+  slot i+j*cnt <- CSR element  row_start + start(i) + j   (strided layout)
+
+then the SpMM stage (lines 16-19) accumulates over the staged slots.
+
+TPU adaptation notes (DESIGN.md §2): each sample is one contiguous run of N
+elements, so the staging uses **one DMA per sample** of the maximal static
+size and masks the tail — the paper's "coarser N = fewer index computations"
+becomes "coarser N = fewer DMA descriptors" on TPU, the same economy.  The
+B-row gather reuses the double-buffered DMA loop of ``ell_spmm``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sampling import PRIME_NUM, _BANDS, _R_THRESHOLDS
+
+
+def _strategy_scalar(row_nnz, sh_width: int):
+    """Traced-scalar version of Table 1 (same math as core.sampling)."""
+    W = jnp.minimum(row_nnz, sh_width)
+    N = row_nnz
+    cnt = jnp.int32(1)
+    prev = row_nnz <= _R_THRESHOLDS[0] * W
+    for t, (d, c) in zip(_R_THRESHOLDS[1:] + (None,), _BANDS):
+        cond = (row_nnz <= t * W) if t is not None else True
+        take = jnp.logical_and(jnp.logical_not(prev), cond)
+        N = jnp.where(take, W // d, N)
+        cnt = jnp.where(take, c, cnt)
+        prev = jnp.logical_or(prev, cond)
+    N = jnp.maximum(N, 1)
+    cnt = jnp.minimum(cnt, jnp.maximum(W, 1))
+    return W, N, cnt
+
+
+def _fused_kernel(rs_ref, nnz_ref, ci_ref, av_ref, b_ref, out_ref,
+                  sh_val, sh_col, stage_i, stage_f, bsc, sem, bsem,
+                  *, sh_width: int, block_f: int):
+    """grid = (row_tiles, feat_tiles).
+
+    rs_ref/nnz_ref: i32[block_r, 1] VMEM — CSR row starts / row nnz
+    ci_ref/av_ref:  HBM — full CSR col_ind / val arrays
+    b_ref:          HBM — dense features [nodes, F]
+    sh_val/sh_col:  VMEM scratch [block_r, sh_width] — the "shared memory"
+    stage_i/stage_f: VMEM scratch [sh_width] — CSR run landing zones
+    bsc:            VMEM scratch [2, 1, block_f] — B-row landing zone
+    """
+    f_start = pl.program_id(1) * block_f
+    block_r = rs_ref.shape[0]
+
+    def run_copy(ref, stage, gstart):
+        # One DMA per sample: maximal static width sh_width, masked later.
+        return pltpu.make_async_copy(
+            ref.at[pl.ds(gstart, sh_width)], stage, sem.at[0])
+
+    def row_body(r, _):
+        row_start = rs_ref[r, 0]
+        row_nnz = nnz_ref[r, 0]
+        W, N, cnt = _strategy_scalar(row_nnz, sh_width)
+        span = jnp.maximum(row_nnz - N + 1, 1)
+
+        # --- sampling stage: fill sh_val/sh_col (Alg. 1 lines 7-14) -------
+        def sample_body(i):
+            start = (i * PRIME_NUM) % span
+            cp_i = run_copy(ci_ref, stage_i, row_start + start)
+            cp_i.start()
+            cp_i.wait()
+            cp_f = run_copy(av_ref, stage_f, row_start + start)
+            cp_f.start()
+            cp_f.wait()
+            # scatter the N staged elements to slots i + j*cnt, j < N
+            def elem_body(j, _):
+                slot = i + j * cnt
+                pl.store(sh_col, (pl.ds(r, 1), pl.ds(slot, 1)),
+                         stage_i[j].reshape(1, 1))
+                pl.store(sh_val, (pl.ds(r, 1), pl.ds(slot, 1)),
+                         stage_f[j].reshape(1, 1))
+                return _
+
+            jax.lax.fori_loop(0, jnp.minimum(N, sh_width), elem_body, None)
+            return None
+
+        # zero-init (dead slots must not contribute to the accumulation)
+        pl.store(sh_val, (pl.ds(r, 1), slice(None)),
+                 jnp.zeros((1, sh_width), sh_val.dtype))
+        pl.store(sh_col, (pl.ds(r, 1), slice(None)),
+                 jnp.zeros((1, sh_width), jnp.int32))
+
+        @pl.when(row_nnz > 0)
+        def _():
+            def do_sample(i, _):
+                sample_body(i)
+                return _
+            jax.lax.fori_loop(0, cnt, do_sample, None)
+
+        # --- SpMM stage over staged slots (Alg. 1 lines 16-19) ------------
+        live_w = jnp.where(row_nnz > 0, jnp.minimum(N * cnt, W), 0)
+
+        def b_copy(c, slot):
+            return pltpu.make_async_copy(
+                b_ref.at[pl.ds(c, 1), pl.ds(f_start, block_f)],
+                bsc.at[slot], bsem.at[slot])
+
+        @pl.when(live_w > 0)
+        def _():
+            b_copy(pl.load(sh_col, (r, 0)), 0).start()
+
+        def k_body(k, acc):
+            slot = jax.lax.rem(k, 2)
+
+            @pl.when(k + 1 < live_w)
+            def _():
+                b_copy(pl.load(sh_col, (r, k + 1)), jax.lax.rem(k + 1, 2)).start()
+
+            b_copy(pl.load(sh_col, (r, k)), slot).wait()
+            return acc + pl.load(sh_val, (r, k)) * bsc[slot, 0, :]
+
+        acc = jax.lax.fori_loop(0, live_w, k_body,
+                                jnp.zeros((block_f,), jnp.float32))
+        pl.store(out_ref, (pl.ds(r, 1), slice(None)), acc[None, :])
+        return _
+
+    jax.lax.fori_loop(0, block_r, row_body, None)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sh_width", "block_r", "block_f", "interpret"))
+def fused_aes_spmm(row_start, row_nnz, col_ind, val, b, *, sh_width: int,
+                   block_r: int = 8, block_f: int = 128,
+                   interpret: bool = True):
+    """AES-SpMM with sampling fused into the kernel (paper Alg. 1).
+
+    ``col_ind``/``val`` must be padded by >= sh_width trailing elements so
+    the fixed-size sample DMA never reads out of bounds (ops.py pads).
+    """
+    rows = row_start.shape[0]
+    feat = b.shape[1]
+    assert rows % block_r == 0 and feat % block_f == 0
+
+    grid = (rows // block_r, feat // block_f)
+    kernel = functools.partial(_fused_kernel, sh_width=sh_width,
+                               block_f=block_f)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_r, sh_width), jnp.float32),   # sh_val
+            pltpu.VMEM((block_r, sh_width), jnp.int32),     # sh_col
+            pltpu.VMEM((sh_width,), jnp.int32),             # CSR col run stage
+            pltpu.VMEM((sh_width,), jnp.float32),           # CSR val run stage
+            pltpu.VMEM((2, 1, block_f), b.dtype),           # B-row stage
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(row_start.reshape(rows, 1).astype(jnp.int32),
+      row_nnz.reshape(rows, 1).astype(jnp.int32),
+      col_ind, val, b)

@@ -1,0 +1,103 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles shape padding (row tiles, feature tiles, CSR over-read guards),
+backend dispatch (interpret=True on CPU — the kernels target TPU), and
+exposes a uniform signature over CSR/ELL inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSR, ELL
+
+from . import ref
+from .aes_sample import aes_sample as _aes_sample_kernel
+from .dequant import dequantize as _dequant_kernel
+from .ell_spmm import ell_spmm as _ell_spmm_kernel
+from .fused_spmm import fused_aes_spmm as _fused_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def ell_spmm(ell: ELL, b, live_w=None, *, block_r: int = 8,
+             block_f: int = 128, quantized_meta=None, interpret=None):
+    """Pallas ELL SpMM with padding.  ``quantized_meta=(scale, x_min)``
+    enables the fused-dequant gather (B must then be uint8)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    rows, width = ell.val.shape
+    feat = b.shape[1]
+    if live_w is None:
+        # Live slots form a contiguous prefix (the strided layout fills
+        # s < N*cnt); its length = 1 + last index with val or col nonzero.
+        mask = (ell.val != 0) | (ell.col != 0)
+        pos = jnp.arange(1, width + 1, dtype=jnp.int32)[None, :]
+        live_w = jnp.max(jnp.where(mask, pos, 0), axis=1).astype(jnp.int32)
+    val = _pad_to(ell.val, block_r, 0)
+    col = _pad_to(ell.col, block_r, 0)
+    lw = _pad_to(live_w, block_r, 0)
+    bp = _pad_to(b, block_f, 1)
+    kw = {}
+    if quantized_meta is not None:
+        scale, x_min = quantized_meta
+        kw = dict(quantized=True, scale=float(scale), x_min=float(x_min))
+    out = _ell_spmm_kernel(val, col, lw, bp, block_r=block_r,
+                           block_f=block_f, interpret=interpret, **kw)
+    return out[:rows, :feat]
+
+
+def aes_sample(csr: CSR, sh_width: int, *, block_r: int = 8,
+               interpret=None) -> ELL:
+    """Pallas sampling pre-pass; pads CSR arrays for the run-DMA over-read."""
+    interpret = _interpret_default() if interpret is None else interpret
+    rows = csr.num_rows
+    row_start = _pad_to(csr.row_ptr[:-1], block_r, 0)
+    row_nnz = _pad_to(csr.row_nnz(), block_r, 0)
+    ci = jnp.pad(csr.col_ind, (0, sh_width))
+    av = jnp.pad(csr.val, (0, sh_width))
+    val, col = _aes_sample_kernel(row_start, row_nnz, ci, av,
+                                  sh_width=sh_width, block_r=block_r,
+                                  interpret=interpret)
+    return ELL(val[:rows], col[:rows], csr.num_cols)
+
+
+def fused_aes_spmm(csr: CSR, b, sh_width: int, *, block_r: int = 8,
+                   block_f: int = 128, interpret=None):
+    """Single-kernel AES-SpMM (paper Alg. 1): sample + multiply fused."""
+    interpret = _interpret_default() if interpret is None else interpret
+    rows = csr.num_rows
+    feat = b.shape[1]
+    row_start = _pad_to(csr.row_ptr[:-1], block_r, 0)
+    row_nnz = _pad_to(csr.row_nnz(), block_r, 0)
+    ci = jnp.pad(csr.col_ind, (0, sh_width))
+    av = jnp.pad(csr.val, (0, sh_width))
+    bp = _pad_to(b, block_f, 1)
+    out = _fused_kernel(row_start, row_nnz, ci, av, bp, sh_width=sh_width,
+                        block_r=block_r, block_f=block_f, interpret=interpret)
+    return out[:rows, :feat]
+
+
+def dequantize(q, scale, x_min, *, bits: int = 8, block_n: int = 256,
+               block_f: int = 128, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    n, f = q.shape
+    qp = _pad_to(_pad_to(q, block_n, 0), block_f, 1)
+    out = _dequant_kernel(qp, scale=float(scale), x_min=float(x_min),
+                          bits=bits, block_n=block_n, block_f=block_f,
+                          interpret=interpret)
+    return out[:n, :f]

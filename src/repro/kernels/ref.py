@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth the kernel tests assert_allclose
+against, and double as the "cuSPARSE-role" exact baseline (csr_spmm).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def csr_spmm(row_ptr, col_ind, val, b):
+    """Exact CSR SpMM (no sampling) — the cuSPARSE-role baseline.
+
+    C[r, :] = sum_{k in row r} val[k] * B[col_ind[k], :]
+    """
+    rows = row_ptr.shape[0] - 1
+    row_ids = jnp.searchsorted(row_ptr, jnp.arange(col_ind.shape[0]), side="right") - 1
+    contrib = val[:, None] * b[col_ind]
+    return jax.ops.segment_sum(contrib, row_ids, num_segments=rows)
+
+
+@jax.jit
+def ell_spmm(ell_val, ell_col, b):
+    """Oracle for the ELL SpMM kernels: dead slots carry val=0 so a plain
+    gather-multiply-reduce is exact."""
+    gathered = b[ell_col]                      # [rows, W, feat]
+    return jnp.einsum("rw,rwf->rf", ell_val, gathered)
+
+
+@jax.jit
+def ell_spmm_rowloop(ell_val, ell_col, b):
+    """Memory-lean oracle (scan over W) for wide-W property tests."""
+    def body(acc, kw):
+        v, c = kw
+        return acc + v[:, None] * b[c], None
+
+    acc0 = jnp.zeros((ell_val.shape[0], b.shape[1]), b.dtype)
+    acc, _ = jax.lax.scan(body, acc0, (ell_val.T, ell_col.T))
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def dequantize(q, x_min, x_max, bits: int = 8):
+    """Oracle for the dequant kernel (paper Eq. 2)."""
+    scale = (x_max - x_min) / (2**bits - 1)
+    return q.astype(jnp.float32) * scale + x_min
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "sh_width"))
+def aes_spmm(row_ptr, col_ind, val, b, sh_width: int, bits: int | None = None,
+             x_min=None, x_max=None):
+    """End-to-end oracle: AES sampling -> (optional dequant) -> ELL SpMM."""
+    from repro.core.sampling import sample_csr_to_ell
+
+    ell_val, ell_col = sample_csr_to_ell(row_ptr, col_ind, val, sh_width)
+    if bits is not None:
+        b = dequantize(b, x_min, x_max, bits)
+    return ell_spmm_rowloop(ell_val, ell_col, b)

@@ -1,0 +1,273 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        param_shardings, opt_shardings,
+                                        scalar_sharding)
+from repro.launch.mesh import make_production_mesh
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          input_specs, loss_fn)
+from repro.optim import adamw_init, adamw_update
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_COLL_LINE_RE = re.compile(
+    r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (post-SPMD,
+    per-device) HLO module, bucketed by op kind.  Result shape ~= the
+    per-device payload (operand-sized for AR/AA, output-sized for AG —
+    a consistent link-traffic proxy across op kinds)."""
+    out: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_LINE_RE.search(line)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        b = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            b += n * _DTYPE_BYTES.get(dt, 4)
+        out[op] = out.get(op, 0) + b
+        counts[op] = counts.get(op, 0) + 1
+        out["total"] = out.get("total", 0) + b
+    out["counts"] = counts
+    return out
+
+
+def abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def build_cell(arch: str, shape: str, mesh, aes_kv=None, options=None,
+               dp_over_model: bool = False, zero1: bool = False,
+               cache_heads: bool = False, donate_cache: bool = False):
+    """Returns (step_fn, arg_specs, in_shardings, out_shardings) for one
+    cell.  ``aes_kv`` opts into AES-KV sampled decode (paper transfer);
+    ``options`` are ArchConfig overrides (kv_quant_bits, remat_policy,
+    bf16_logits, ... — the §Perf hillclimb levers); ``dp_over_model``
+    spreads the batch over the model axis too (for replicated-param archs
+    whose model axis would otherwise sit idle)."""
+    cfg = get_config(arch)
+    if aes_kv:
+        cfg = cfg.with_aes_kv(aes_kv)
+    if options:
+        cfg = cfg.with_options(**options)
+    seq, batch, kind = SHAPES[shape]
+    specs = input_specs(cfg, kind, seq, batch)
+
+    key = jax.random.PRNGKey(0)
+    params_s = abstract(functools.partial(init_params, cfg), key)
+    params_sh = param_shardings(mesh, params_s)
+
+    def _batch_sh(tree):
+        if not dp_over_model:
+            return batch_shardings(mesh, tree)
+        from repro.distributed.sharding import dp_axes as _dp
+        wide = jax.sharding.Mesh(mesh.devices.reshape(-1, 1),
+                                 ("data", "model"))
+        # reuse the rules on a flattened all-DP view, then re-express on
+        # the true mesh: batch over every axis
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        axes = tuple(mesh.axis_names)
+
+        def rule(leaf):
+            b = leaf.shape[0] if leaf.ndim else 1
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            ok = leaf.ndim and b % size == 0
+            spec = ((axes,) if ok else (None,)) + (None,) * (leaf.ndim - 1) \
+                if leaf.ndim else ()
+            return NamedSharding(mesh, P(*spec))
+
+        return jax.tree.map(rule, tree)
+
+    if kind == "train":
+        opt_s = abstract(adamw_init, params_s)
+        opt_sh = opt_shardings(mesh, opt_s, zero1=zero1)
+        batch_sh = _batch_sh(specs)
+
+        def train_step(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch))(params)
+            new_params, opt = adamw_update(grads, opt, params, lr=1e-4,
+                                           weight_decay=0.1)
+            return new_params, opt, loss
+
+        args = (params_s, opt_s, specs)
+        shard = (params_sh, opt_sh, batch_sh)
+        out_sh = (params_sh, opt_sh, scalar_sharding(mesh))
+        return train_step, args, shard, out_sh
+
+    if kind == "prefill":
+        batch_sh = _batch_sh(specs)
+
+        def prefill_step(params, batch):
+            logits, _, cache = forward(params, cfg,
+                                       tokens=batch.get("tokens"),
+                                       embeds=batch.get("embeds"),
+                                       want_cache=True, remat=False)
+            return logits, cache
+
+        return prefill_step, (params_s, specs), (params_sh, batch_sh), None
+
+    # decode
+    cache_s = specs.pop("cache")
+    cache_len_s = specs.pop("cache_len")
+    cache_sh = cache_shardings(mesh, cache_s,
+                               stacked=cfg.block_pattern is None,
+                               prefer_heads=cache_heads)
+    tok_sh = _batch_sh(specs)
+
+    def serve_step(params, cache, toks, cache_len):
+        logits, new_cache = decode_step(
+            params, cfg, cache, tokens=toks.get("tokens"),
+            embeds=toks.get("embeds"), cache_len=cache_len)
+        return logits, new_cache
+
+    # donate_cache is handled at jit time (donate_argnums) in run_cell:
+    # in-place cache update so XLA aliases the buffers (no full-cache copy)
+    return (serve_step,
+            (params_s, cache_s, specs, cache_len_s),
+            (params_sh, cache_sh, tok_sh, scalar_sharding(mesh)),
+            None)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
+             verbose: bool = True, variant: str = "", **cell_kw) -> dict:
+    cfg = get_config(arch)
+    seq, batch, kind = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "kind": kind, "seq": seq, "batch": batch}
+    if variant:
+        result["variant"] = variant
+
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        result["status"] = "SKIP"
+        result["reason"] = ("pure full attention — quadratic long-context "
+                           "decode out of spec (DESIGN.md §4)")
+        _finish(result, save, verbose)
+        return result
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        donate = cell_kw.get("donate_cache", False)
+        step, args, shardings, out_sh = build_cell(arch, shape, mesh,
+                                                   **cell_kw)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=shardings,
+                             out_shardings=out_sh,
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            text = compiled.as_text()
+        result.update({
+            "status": "OK",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+            "collective_bytes_per_device": collective_bytes(text),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(
+                    mem, "peak_memory_in_bytes",
+                    getattr(mem, "temp_size_in_bytes", None)),
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded bug
+        result["status"] = "FAIL"
+        result["error"] = f"{type(e).__name__}: {e}"[:2000]
+        result["traceback"] = traceback.format_exc()[-4000:]
+    _finish(result, save, verbose)
+    return result
+
+
+def _finish(result, save, verbose):
+    if save:
+        ART.mkdir(parents=True, exist_ok=True)
+        v = f"__{result['variant']}" if result.get("variant") else ""
+        name = f"{result['arch']}__{result['shape']}__{result['mesh']}{v}.json"
+        (ART / name).write_text(json.dumps(result, indent=1, default=str))
+    if verbose:
+        s = result["status"]
+        extra = ""
+        if s == "OK":
+            extra = (f" flops/dev={result['flops_per_device']:.3e}"
+                     f" coll={result['collective_bytes_per_device'].get('total', 0):.3e}B"
+                     f" compile={result['compile_s']}s")
+        elif s == "FAIL":
+            extra = " " + result["error"].splitlines()[0][:160]
+        print(f"[dryrun] {result['arch']}/{result['shape']}/{result['mesh']}"
+              f": {s}{extra}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp)
+                n_fail += r["status"] == "FAIL"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e target).
+
+single pod : (16, 16)    axes (data, model)            = 256 chips
+multi pod  : (2, 16, 16) axes (pod, data, model)       = 512 chips
+
+``make_production_mesh`` is a function (never module-level state) so that
+importing this module does not touch jax device initialization — the
+dry-run sets XLA_FLAGS for 512 host devices before its first jax import,
+smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: int | None = None):
+    """Debug mesh over whatever devices exist (tests: 1 CPU device)."""
+    n = jax.device_count()
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline terms (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (~3D torus, per-direction)

@@ -1,0 +1,118 @@
+"""Batched serving driver: prefill + decode loop with continuous batching
+slots, optional AES-KV sampling and INT8-quantized KV (the paper's two
+levers, transferred: sampling bounds attention reads, quantization halves
+cache traffic — DESIGN.md §4).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+        --requests 8 --gen 32 [--aes-kv 64]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import decode_step, forward, init_cache, init_params
+
+
+@dataclass
+class ServeStats:
+    prefill_s: float
+    decode_s: float
+    tokens: int
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens / max(self.decode_s, 1e-9)
+
+
+def serve(cfg, params, prompts: np.ndarray, gen_len: int,
+          greedy: bool = True):
+    """prompts: int32 [B, P].  Returns (generated [B, gen_len], stats)."""
+    B, P = prompts.shape
+    S_max = P + gen_len
+
+    t0 = time.perf_counter()
+    # prefill: run the prompt, seed the cache
+    logits, _, cache = forward(params, cfg, tokens=jnp.asarray(prompts),
+                               want_cache=True, remat=False)
+    # right-size the cache buffers to S_max
+    def grow(a):
+        if a.ndim >= 3 and a.shape[-3] == P and cfg.block_pattern is None:
+            pad = [(0, 0)] * a.ndim
+            pad[-3] = (0, S_max - P)
+            return jnp.pad(a, pad)
+        return a
+
+    if cfg.block_pattern is None:
+        cache = jax.tree.map(grow, cache)
+        if cfg.kv_quant_bits:
+            # prefill emits bf16 KV; quantize it into the int8 cache layout
+            from repro.models.attention import quantize_kv
+
+            kq, ks = quantize_kv(cache["k"], cfg.kv_quant_bits)
+            vq, vs = quantize_kv(cache["v"], cfg.kv_quant_bits)
+            cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(next_tok)
+    t_prefill = time.perf_counter() - t0
+
+    stepper = jax.jit(
+        lambda p, c, t, n: decode_step(p, cfg, c, tokens=t, cache_len=n))
+
+    out = [next_tok]
+    t0 = time.perf_counter()
+    cache_len = jnp.int32(P)
+    tok = next_tok
+    for _ in range(gen_len - 1):
+        logits, cache = stepper(params, cache, tok, cache_len)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+        cache_len = cache_len + 1
+    gen = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(gen)
+    t_decode = time.perf_counter() - t0
+    return np.asarray(gen), ServeStats(t_prefill, t_decode, B * gen_len)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--aes-kv", type=int, default=None,
+                    help="AES-KV sampling width (paper-technique transfer)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="INT8 KV cache (paper Eq. 1-2 on cache rows)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    if args.aes_kv:
+        cfg = cfg.with_aes_kv(args.aes_kv)
+    if args.kv_int8:
+        cfg = cfg.with_options(kv_quant_bits=8)
+    if cfg.frontend is not None:
+        raise SystemExit("serve driver covers token archs; vlm/audio stubs "
+                         "use examples/frontend_stub_inference.py")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(1, cfg.vocab_size,
+                           (args.requests, args.prompt_len)).astype(np.int32)
+    gen, stats = serve(cfg, params, prompts, args.gen)
+    print(f"prefill {stats.prefill_s:.2f}s | decode {stats.decode_s:.2f}s | "
+          f"{stats.tok_per_s:.1f} tok/s | first tokens {gen[:, :8].tolist()}")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 200 --seq 256 --batch 8 --smoke
+
+``--smoke`` swaps in the reduced config so a ~100M-class model trains for a
+few hundred steps on CPU; on TPU the full config + production mesh apply.
+Composes every substrate: config registry, data pipeline, sharding rules,
+AdamW + cosine schedule, fault-tolerant runner (checkpoint/resume,
+straggler monitor), optional INT8 gradient compression across pods.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_config
+from repro.data import make_pipeline
+from repro.distributed.sharding import (batch_shardings, opt_shardings,
+                                        param_shardings)
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import init_params, loss_fn
+from repro.optim import (adamw_init, adamw_update, compress_grads,
+                         cosine_with_warmup, decompress_grads)
+from repro.runtime import FaultTolerantRunner, RunnerConfig
+
+
+def make_train_step(cfg, lr_sched, grad_compress: bool = False):
+    def train_step(state, batch):
+        params, opt = state
+
+        def lf(p):
+            return loss_fn(p, cfg, batch)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        if grad_compress:
+            # int8 compression applied where the cross-pod all-reduce would
+            # run; on a single pod this exercises the numerics path
+            q, scales, _ = compress_grads(grads)
+            grads = decompress_grads(q, scales)
+        lr = lr_sched(opt.step)
+        params, opt = adamw_update(grads, opt, params, lr=lr,
+                                   weight_decay=0.1)
+        return (params, opt), {"loss": loss}
+
+    return train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable ~100M-class)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_local_mesh())
+
+    pipe = make_pipeline(cfg, seq_len=args.seq, global_batch=args.batch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    sched = cosine_with_warmup(args.lr, warmup_steps=max(args.steps // 20, 1),
+                               total_steps=args.steps)
+
+    with mesh:
+        p_sh = param_shardings(mesh, params)
+        o_sh = opt_shardings(mesh, opt)
+        params = jax.device_put(params, p_sh)
+        opt = jax.device_put(opt, o_sh)
+        sample = pipe.batch_at(0)
+        b_sh = batch_shardings(mesh, sample)
+        step_fn = jax.jit(make_train_step(cfg, sched, args.grad_compress),
+                          in_shardings=((p_sh, o_sh), b_sh),
+                          donate_argnums=(0,))
+
+        runner = FaultTolerantRunner(RunnerConfig(
+            total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+            inject_failure_at=args.inject_failure_at))
+
+        losses = []
+        t0 = time.time()
+
+        def batch_at(step):
+            b = pipe.batch_at(step)
+            return jax.device_put(b, b_sh)
+
+        def step_and_log(state, batch):
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+            step = len(losses)
+            if step % 20 == 0 or step == 1:
+                print(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                      f"({(time.time() - t0) / step:.3f}s/step)", flush=True)
+            return state, metrics
+
+        state, step, metrics = runner.run(
+            step_and_log, (params, opt), batch_at,
+            start_step=None if args.resume else 0)
+
+    print(f"done: {step} steps, final loss {losses[-1]:.4f} "
+          f"(first {losses[0]:.4f})")
+    if runner.monitor.breaches:
+        print(f"stragglers detected: {len(runner.monitor.breaches)}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

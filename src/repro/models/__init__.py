@@ -1,0 +1,6 @@
+"""LM pillar: model blocks + assembly for the 10 assigned architectures."""
+from repro.models.lm import (decode_step, forward, init_cache, init_params,
+                             input_specs, loss_fn)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_params",
+           "input_specs", "loss_fn"]

@@ -1,0 +1,318 @@
+"""Attention variants: GQA/MQA/MHA with RoPE and optional sliding window,
+DeepSeek-V2 MLA (latent KV cache with absorbed decode matmuls), and the
+paper-technique transfer AES-KV (adaptive sampling of KV positions with the
+exact Table-1 strategy + Eq.-3 hash — see DESIGN.md §4).
+
+Shapes: activations [B, S, d_model]; KV cache [B, S_max, KV, head_dim]
+(seq-major so decode writes are a dynamic_update_slice on axis 1, and the
+cache can be sequence-sharded for long contexts).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, dtype_of, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# AES-KV: the paper's adaptive edge sampling, transferred to KV positions.
+# ---------------------------------------------------------------------------
+
+def aes_kv_indices(seq_len: int, width: int) -> np.ndarray:
+    """Sample ``width`` KV positions from a cache of ``seq_len`` using the
+    paper's strategy table + hash, treating the KV sequence as one CSR row
+    with row_nnz = seq_len.  Trace-time constant (both args static)."""
+    from repro.core.sampling import PRIME_NUM
+
+    nnz = seq_len
+    W = min(nnz, width)
+    R = nnz / W
+    if R <= 1:
+        N, cnt = nnz, 1
+    elif R <= 2:
+        N, cnt = W // 4, 4
+    elif R <= 36:
+        N, cnt = W // 8, 8
+    elif R <= 54:
+        N, cnt = W // 16, 16
+    else:
+        N, cnt = W // 32, 32
+    N = max(N, 1)
+    cnt = min(cnt, max(W, 1))
+    idx = np.zeros(width, np.int64)
+    for i in range(cnt):
+        start = (i * PRIME_NUM) % (nnz - N + 1)
+        for j in range(N):
+            slot = i + j * cnt
+            if slot >= width:
+                break
+            idx[slot] = start + j
+    # dead slots point at position 0; recency correction: always keep the
+    # last `cnt` positions reachable by pinning the tail slots to the most
+    # recent tokens (local context dominates LM attention)
+    tail = min(cnt, width)
+    idx[width - tail:] = np.arange(nnz - tail, nnz)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA / MHA
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    """Weights kept 3-D ([d_model, heads, head_dim]) so tensor parallelism
+    shards the head axis directly — no reshape-vs-sharding conflicts."""
+    dt = dtype_of(cfg)
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads, hd), dt,
+                         scale=1.0 / np.sqrt(cfg.d_model)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads, hd), dt,
+                         scale=1.0 / np.sqrt(cfg.d_model)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads, hd), dt,
+                         scale=1.0 / np.sqrt(cfg.d_model)),
+        "wo": dense_init(ks[3], (cfg.num_heads, hd, cfg.d_model), dt,
+                         scale=1.0 / np.sqrt(cfg.num_heads * hd)),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dt)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dt)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dt)
+    return p
+
+
+def _qkv(params, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(q, k, v, cfg, mask):
+    """Grouped attention core.  q [B,Sq,H,D]; k,v [B,Sk,KV,D];
+    mask [B?,Sq,Sk] bool (True = attend)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scores = jnp.einsum("bqngd,bknd->bngqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(D)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bngqk,bknd->bqngd", w, v)  # [B,Sq,KV,G,D]
+
+
+def causal_mask(Sq: int, Sk: int, q_offset, window: int | None = None):
+    """[1, Sq, Sk] True where query may attend key."""
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None]
+
+
+def attention(params, x, cfg, positions, *, window=None):
+    """Full-sequence causal attention (train / prefill).
+    Returns (out [B,S,d_model], (k, v) for cache seeding)."""
+    q, k, v = _qkv(params, x, cfg, positions)
+    S = x.shape[1]
+    # positions are [B,S] starting at 0 for train/prefill
+    mask = causal_mask(S, S, 0, window=window)
+    out = _attend(q, k, v, cfg, jnp.broadcast_to(mask, (x.shape[0], S, S)))
+    out = out.reshape(*out.shape[:2], cfg.num_heads, -1)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), (k, v)
+
+
+def quantize_kv(t, bits: int = 8):
+    """Paper Eq. 1 applied to a KV row [B,1,KV,D]: symmetric per-(head)
+    scale, int8 storage.  Returns (q int8, scale f32 [B,1,KV])."""
+    levels = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / levels
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -levels, levels).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    """Paper Eq. 2: back to bf16 at the attention read."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_decode(params, x, cache_k, cache_v, cache_len, cfg, *,
+                     window=None, cache_ks=None, cache_vs=None):
+    """One-token decode: x [B,1,d_model]; cache_[kv] [B,S_max,KV,D].
+    Writes the new KV at ``cache_len`` and attends over the cache.
+
+    When a sliding window is set and the cache buffer is window-sized
+    (S_max <= window) the cache is a ring buffer: writes wrap modulo S_max
+    and all warm slots are valid (keys keep the RoPE of their true
+    positions).  Applies AES-KV sampling when cfg.aes_kv_width is set."""
+    B, S1, _ = x.shape
+    S_max = cache_k.shape[1]
+    ring = window is not None and S_max <= window
+    write_pos = jnp.mod(cache_len, S_max) if ring else cache_len
+    positions = jnp.broadcast_to(cache_len, (B, 1))  # true position for RoPE
+    q, k_new, v_new = _qkv(params, x, cfg, positions)
+    quant = cache_ks is not None
+    if quant:  # INT8 KV cache (paper Eq. 1-2 transferred; DESIGN.md §4)
+        kq, ks = quantize_kv(k_new, cfg.kv_quant_bits or 8)
+        vq, vs = quantize_kv(v_new, cfg.kv_quant_bits or 8)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, kq,
+                                               (0, write_pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, vq,
+                                               (0, write_pos, 0, 0))
+        cache_ks = jax.lax.dynamic_update_slice(cache_ks, ks,
+                                                (0, write_pos, 0))
+        cache_vs = jax.lax.dynamic_update_slice(cache_vs, vs,
+                                                (0, write_pos, 0))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, write_pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, write_pos, 0, 0))
+
+    k, v = cache_k, cache_v
+    ks_r, vs_r = cache_ks, cache_vs
+    kpos = jnp.arange(S_max)[None, :]
+    if cfg.aes_kv_width is not None and cfg.aes_kv_width < S_max:
+        idx = jnp.asarray(aes_kv_indices(S_max, cfg.aes_kv_width))
+        k = jnp.take(cache_k, idx, axis=1)
+        v = jnp.take(cache_v, idx, axis=1)
+        if quant:
+            ks_r = jnp.take(cache_ks, idx, axis=1)
+            vs_r = jnp.take(cache_vs, idx, axis=1)
+        kpos = idx[None, :]
+    if quant:
+        k = dequantize_kv(k, ks_r)
+        v = dequantize_kv(v, vs_r)
+    if ring:
+        valid = (kpos <= write_pos) | (cache_len >= S_max)
+    else:
+        valid = kpos <= cache_len
+        if window is not None:
+            valid &= kpos > cache_len - window
+    mask = jnp.broadcast_to(valid[:, None, :], (B, 1, kpos.shape[1]))
+    out = _attend(q, k, v, cfg, mask)
+    out = out.reshape(B, 1, cfg.num_heads, -1)
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if quant:
+        return proj, cache_k, cache_v, cache_ks, cache_vs
+    return proj, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 MLA
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    dt = dtype_of(cfg)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], (cfg.d_model, m.q_lora_rank), dt),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, H,
+                                    m.nope_head_dim + m.rope_head_dim), dt,
+                           scale=1.0 / np.sqrt(m.q_lora_rank)),
+        "w_dkv": dense_init(ks[2], (cfg.d_model,
+                                    m.kv_lora_rank + m.rope_head_dim), dt),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "w_uk": dense_init(ks[3], (m.kv_lora_rank, H, m.nope_head_dim), dt),
+        "w_uv": dense_init(ks[4], (m.kv_lora_rank, H, m.v_head_dim), dt),
+        "wo": dense_init(ks[5], (H, m.v_head_dim, cfg.d_model), dt,
+                         scale=1.0 / np.sqrt(H * m.v_head_dim)),
+    }
+
+
+def _mla_q(params, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    cq = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, params["w_uq"])
+    q_nope, q_pe = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_latent(params, x, cfg, positions):
+    m = cfg.mla
+    ckv_full = x @ params["w_dkv"]
+    c_kv, k_pe = jnp.split(ckv_full, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe  # [B,S,kv_lora], [B,S,rope_dim]
+
+
+def mla_attention(params, x, cfg, positions):
+    """Full-sequence MLA (train / prefill): expand K/V explicitly.
+    Returns (out, (c_kv, k_pe) latent cache)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_pe = _mla_q(params, x, cfg, positions)
+    c_kv, k_pe = _mla_latent(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsc,chd->bshd", c_kv, params["w_uk"])
+    v = jnp.einsum("bsc,chd->bshd", c_kv, params["w_uv"])
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
+                         preferred_element_type=jnp.float32) +
+              jnp.einsum("bqhd,bkd->bhqk", q_pe, k_pe,
+                         preferred_element_type=jnp.float32)) * scale
+    mask = causal_mask(S, S, 0)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return jnp.einsum("bshd,hdo->bso", out, params["wo"]), (c_kv, k_pe)
+
+
+def mla_decode(params, x, cache_c, cache_pe, cache_len, cfg):
+    """Absorbed-matmul MLA decode: scores and values computed directly in
+    latent space (the MLA deployment trick — KV cache is kv_lora+rope wide).
+    AES-KV sampling applies to latent positions when enabled."""
+    m = cfg.mla
+    B, S1, _ = x.shape
+    S_max = cache_c.shape[1]
+    positions = jnp.broadcast_to(cache_len, (B, 1))
+    q_nope, q_pe = _mla_q(params, x, cfg, positions)
+    c_new, pe_new = _mla_latent(params, x, cfg, positions)
+    cache_c = jax.lax.dynamic_update_slice(
+        cache_c, c_new.astype(cache_c.dtype), (0, cache_len, 0))
+    cache_pe = jax.lax.dynamic_update_slice(
+        cache_pe, pe_new.astype(cache_pe.dtype), (0, cache_len, 0))
+
+    c, pe = cache_c, cache_pe
+    kpos = jnp.arange(S_max)[None, :]
+    if cfg.aes_kv_width is not None and cfg.aes_kv_width < S_max:
+        idx = jnp.asarray(aes_kv_indices(S_max, cfg.aes_kv_width))
+        c = jnp.take(cache_c, idx, axis=1)
+        pe = jnp.take(cache_pe, idx, axis=1)
+        kpos = idx[None, :]
+
+    # absorb: q_lat[b,1,h,c] = q_nope . w_uk
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, params["w_uk"])
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    scores = (jnp.einsum("bqhc,bkc->bhqk", q_lat, c,
+                         preferred_element_type=jnp.float32) +
+              jnp.einsum("bqhd,bkd->bhqk", q_pe, pe,
+                         preferred_element_type=jnp.float32)) * scale
+    valid = kpos <= cache_len
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(c.dtype)
+    out_lat = jnp.einsum("bhqk,bkc->bqhc", w, c)
+    out = jnp.einsum("bqhc,chd->bqhd", out_lat, params["w_uv"])
+    return (jnp.einsum("bshd,hdo->bso", out, params["wo"]),
+            cache_c, cache_pe)

@@ -1,0 +1,565 @@
+"""LM assembly: every assigned architecture behind one API.
+
+    params        = init_params(cfg, key)            (eval_shape-able)
+    logits, cache = forward(params, cfg, tokens=..., embeds=...)
+    cache         = init_cache(cfg, batch, seq)      (abstract-able)
+    logits, cache = decode_step(params, cfg, cache, tokens/embeds, cache_len)
+    loss          = loss_fn(params, cfg, batch)
+    specs         = input_specs(cfg, shape_kind, seq, batch)
+
+Uniform archs (dense/moe/vlm/audio) stack layer params on a leading axis
+and run under ``jax.lax.scan`` (small HLO, fast multi-mesh compiles, remat
+per layer).  Pattern archs (xlstm, zamba2) run a Python loop respecting
+``cfg.block_pattern``; zamba2's ``shared_attn`` entries reuse ONE attention
+param set (weight sharing per the paper; per-application LoRA omitted —
+DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import dense_init, dtype_of, init_mlp, mlp, rms_norm
+
+
+def _is_uniform(cfg: ArchConfig) -> bool:
+    return cfg.block_pattern is None
+
+
+def _is_grouped(cfg: ArchConfig) -> bool:
+    """Periodic hybrid (zamba2): groups of (attn_every-1) mamba blocks +
+    one weight-shared attention block, scanned over groups so the HLO stays
+    small at 81 layers (a python loop at that depth is a compile-time
+    scalability bug — XLA flags it 'very slow compile')."""
+    return (cfg.block_pattern is not None and cfg.attn_every > 0)
+
+
+def _group_layout(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(num_groups, mamba_per_group, tail_mamba)."""
+    per = cfg.attn_every
+    g = cfg.num_layers // per
+    tail = cfg.num_layers - g * per
+    return g, per - 1, tail
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_uniform_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+         "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.mla is not None:
+        p["attn"] = attn_mod.init_mla(k1, cfg)
+    else:
+        p["attn"] = attn_mod.init_attention(k1, cfg)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def _init_pattern_block(key, cfg, kind: str):
+    if kind == "mamba":
+        return ssm_mod.init_mamba(key, cfg)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm(key, cfg)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm(key, cfg)
+    raise ValueError(kind)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    p: dict[str, Any] = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model), dt,
+                            scale=1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size), dt)
+
+    if _is_uniform(cfg):
+        p["layers"] = jax.vmap(
+            functools.partial(_init_uniform_layer, cfg=cfg))(
+                jax.random.split(keys[2], cfg.num_layers))
+    elif _is_grouped(cfg):
+        G, per, tail = _group_layout(cfg)
+
+        def init_group(k):
+            ks = jax.random.split(k, per)
+            return {
+                "mamba": jax.vmap(
+                    functools.partial(ssm_mod.init_mamba, cfg=cfg))(ks),
+                "norms": jnp.zeros((per + 1, cfg.d_model), jnp.float32),
+            }
+
+        p["groups"] = jax.vmap(init_group)(jax.random.split(keys[2], G))
+        if tail:
+            p["tail"] = {
+                "mamba": jax.vmap(
+                    functools.partial(ssm_mod.init_mamba, cfg=cfg))(
+                        jax.random.split(keys[1], tail)),
+                "norms": jnp.zeros((tail, cfg.d_model), jnp.float32),
+            }
+        p["shared_attn"] = attn_mod.init_attention(
+            jax.random.fold_in(keys[0], 7), cfg)
+        p["shared_mlp"] = init_mlp(jax.random.fold_in(keys[0], 8), cfg)
+    else:
+        blocks = []
+        norms = []
+        for i, kind in enumerate(cfg.block_pattern):
+            norms.append(jnp.zeros((cfg.d_model,), jnp.float32))
+            if kind == "shared_attn":
+                blocks.append({})  # weights shared, stored once below
+            else:
+                blocks.append(_init_pattern_block(keys[3 + i], cfg, kind))
+        p["blocks"] = blocks
+        p["block_norms"] = norms
+        if any(k == "shared_attn" for k in cfg.block_pattern):
+            p["shared_attn"] = attn_mod.init_attention(keys[2], cfg)
+            p["shared_mlp"] = init_mlp(jax.random.fold_in(keys[2], 1), cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    """Abstract-friendly KV/state cache for decode."""
+    dt = jnp.bfloat16
+    L = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    if _is_uniform(cfg):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {
+                "c_kv": jnp.zeros((L, batch, seq, m.kv_lora_rank), dt),
+                "k_pe": jnp.zeros((L, batch, seq, m.rope_head_dim), dt),
+            }
+        seq_eff = min(seq, cfg.sliding_window or seq)  # ring buffer for SWA
+        if cfg.kv_quant_bits:  # INT8 cache + per-(pos,head) scales
+            return {
+                "k": jnp.zeros((L, batch, seq_eff, cfg.num_kv_heads, hd),
+                               jnp.int8),
+                "v": jnp.zeros((L, batch, seq_eff, cfg.num_kv_heads, hd),
+                               jnp.int8),
+                "k_scale": jnp.ones((L, batch, seq_eff, cfg.num_kv_heads),
+                                    jnp.float32),
+                "v_scale": jnp.ones((L, batch, seq_eff, cfg.num_kv_heads),
+                                    jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((L, batch, seq_eff, cfg.num_kv_heads, hd), dt),
+            "v": jnp.zeros((L, batch, seq_eff, cfg.num_kv_heads, hd), dt),
+        }
+    inner = cfg.ssm_expand * cfg.d_model
+    n_attn_seq = min(seq, cfg.sliding_window or seq)
+    if _is_grouped(cfg):
+        G, per, tail = _group_layout(cfg)
+        hdm = inner // cfg.num_heads
+        K = cfg.ssm_conv
+
+        def mamba_cache(*lead):
+            return {
+                "state": jnp.zeros((*lead, batch, cfg.num_heads, hdm,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": {
+                    "x": jnp.zeros((*lead, batch, K - 1, cfg.num_heads, hdm), dt),
+                    "B": jnp.zeros((*lead, batch, K - 1, cfg.ssm_state), dt),
+                    "C": jnp.zeros((*lead, batch, K - 1, cfg.ssm_state), dt),
+                },
+            }
+
+        c = {
+            "groups": {
+                "mamba": mamba_cache(G, per),
+                "k": jnp.zeros((G, batch, n_attn_seq, cfg.num_kv_heads, hd), dt),
+                "v": jnp.zeros((G, batch, n_attn_seq, cfg.num_kv_heads, hd), dt),
+            },
+        }
+        if tail:
+            c["tail"] = mamba_cache(tail)
+        return c
+    cache: dict[str, Any] = {"blocks": []}
+    for kind in cfg.block_pattern:
+        if kind == "mamba":
+            hdm = inner // cfg.num_heads
+            K = cfg.ssm_conv
+            cache["blocks"].append({
+                "state": jnp.zeros((batch, cfg.num_heads, hdm,
+                                    cfg.ssm_state), jnp.float32),
+                "conv": {
+                    "x": jnp.zeros((batch, K - 1, cfg.num_heads, hdm), dt),
+                    "B": jnp.zeros((batch, K - 1, cfg.ssm_state), dt),
+                    "C": jnp.zeros((batch, K - 1, cfg.ssm_state), dt),
+                },
+            })
+        elif kind == "mlstm":
+            hdm = inner // cfg.num_heads
+            cache["blocks"].append({
+                "C": jnp.zeros((batch, cfg.num_heads, hdm, hdm + 1),
+                               jnp.float32)})
+        elif kind == "slstm":
+            d = cfg.d_model
+            cache["blocks"].append({
+                "c": jnp.zeros((batch, d), jnp.float32),
+                "n": jnp.ones((batch, d), jnp.float32),
+                "h": jnp.zeros((batch, d), jnp.float32)})
+        elif kind == "shared_attn":
+            cache["blocks"].append({
+                "k": jnp.zeros((batch, n_attn_seq, cfg.num_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, n_attn_seq, cfg.num_kv_heads, hd), dt)})
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _remat(body, cfg):
+    """Remat policy (§Perf lever): default saves only layer boundaries
+    (full recompute); "dots" saves matmul outputs — no recompute of the
+    TP-psum'd matmuls in backward at the cost of activation memory."""
+    if cfg.remat_policy == "nothing":
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _embed(params, cfg, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(dtype_of(cfg))
+    x = params["embed"][tokens]
+    if cfg.tie_embeddings:  # gemma convention
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(x.dtype)
+    return x
+
+
+def _unembed(params, cfg, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    # bf16_logits (§Perf lever): keep the [B,S,V] tensor bf16 end to end —
+    # halves logits HBM+collective traffic; softmax still reduces in f32
+    return logits if cfg.bf16_logits else logits.astype(jnp.float32)
+
+
+def _uniform_layer(p, x, cfg, positions, want_cache: bool):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, kv = attn_mod.mla_attention(p["attn"], h, cfg, positions)
+    else:
+        a, kv = attn_mod.attention(p["attn"], h, cfg, positions,
+                                   window=cfg.sliding_window)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = moe_mod.moe_mlp(p["moe"], h, cfg, cfg.act)
+    else:
+        f, aux = mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+    x = x + f
+    kv_out = kv if want_cache else None
+    return x, aux, kv_out
+
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None,
+            want_cache: bool = False, remat: bool = True):
+    """Full-sequence pass.  Returns (logits f32, aux_loss, cache|None)."""
+    x = _embed(params, cfg, tokens, embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if _is_uniform(cfg):
+        def body(x, lp):
+            x, aux, kv = _uniform_layer(lp, x, cfg, positions, want_cache)
+            return x, (aux, kv)
+
+        if remat:
+            body = _remat(body, cfg)
+        x, (auxs, kvs) = jax.lax.scan(body, x, params["layers"])
+        aux = jnp.sum(auxs)
+        cache = None
+        if want_cache:
+            if cfg.mla is not None:
+                cache = {"c_kv": kvs[0].astype(jnp.bfloat16),
+                         "k_pe": kvs[1].astype(jnp.bfloat16)}
+            else:
+                cache = {"k": kvs[0].astype(jnp.bfloat16),
+                         "v": kvs[1].astype(jnp.bfloat16)}
+        return _unembed(params, cfg, x), aux, cache
+
+    if _is_grouped(cfg):
+        G, per, tail = _group_layout(cfg)
+
+        def run_mamba(x, mp, norm):
+            h = rms_norm(x, norm, cfg.norm_eps)
+            y, st, conv = ssm_mod.mamba_block(mp, h, cfg)
+            return x + y, st, conv
+
+        def run_shared_attn(x, norm):
+            h = rms_norm(x, norm, cfg.norm_eps)
+            a, kv = attn_mod.attention(params["shared_attn"], h, cfg,
+                                       positions, window=cfg.sliding_window)
+            y = a + mlp(params["shared_mlp"],
+                        rms_norm(x + a, norm, cfg.norm_eps), cfg.act)
+            return x + y, kv
+
+        def group_body(x, gp):
+            sts, convs = [], []
+            for j in range(per):
+                mp = jax.tree.map(lambda a: a[j], gp["mamba"])
+                x, st, conv = run_mamba(x, mp, gp["norms"][j])
+                sts.append(st)
+                convs.append(conv)
+            x, kv = run_shared_attn(x, gp["norms"][per])
+            ys = None
+            if want_cache:
+                ys = (jnp.stack(sts),
+                      jax.tree.map(lambda *t: jnp.stack(t), *convs),
+                      kv[0].astype(jnp.bfloat16),
+                      kv[1].astype(jnp.bfloat16))
+            return x, ys
+
+        body = _remat(group_body, cfg) if remat else group_body
+        x, ys = jax.lax.scan(body, x, params["groups"])
+
+        tail_sts, tail_convs = [], []
+        for j in range(tail):
+            mp = jax.tree.map(lambda a: a[j], params["tail"]["mamba"])
+            x, st, conv = run_mamba(x, mp, params["tail"]["norms"][j])
+            tail_sts.append(st)
+            tail_convs.append(conv)
+
+        cache = None
+        if want_cache:
+            cache = {"groups": {
+                "mamba": {"state": ys[0],
+                          "conv": jax.tree.map(
+                              lambda a: a.astype(jnp.bfloat16), ys[1])},
+                "k": ys[2], "v": ys[3]}}
+            if tail:
+                cache["tail"] = {
+                    "state": jnp.stack(tail_sts),
+                    "conv": jax.tree.map(
+                        lambda *t: jnp.stack(t).astype(jnp.bfloat16),
+                        *tail_convs)}
+        return _unembed(params, cfg, x), jnp.zeros((), jnp.float32), cache
+
+    # pattern archs
+    def _pin_dp(t):
+        """H1b: explicit pure-DP constraint on the residual stream so GSPMD
+        never improvises model-axis shardings for replicated-weight blocks
+        (requires an ambient mesh with data/model axes)."""
+        if not cfg.activation_dp:
+            return t
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(
+            t, P(("data", "model"), None, None))
+
+    x = _pin_dp(x)
+    cache_out = {"blocks": []} if want_cache else None
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        h = rms_norm(x, params["block_norms"][i], cfg.norm_eps)
+        if kind == "mamba":
+            y, st, conv = ssm_mod.mamba_block(params["blocks"][i], h, cfg)
+            if want_cache:
+                cache_out["blocks"].append(
+                    {"state": st,
+                     "conv": jax.tree.map(
+                         lambda a: a.astype(jnp.bfloat16), conv)})
+        elif kind == "mlstm":
+            y, st = xlstm_mod.mlstm_block(params["blocks"][i], h, cfg)
+            if want_cache:
+                cache_out["blocks"].append({"C": st})
+        elif kind == "slstm":
+            y, st = xlstm_mod.slstm_block(params["blocks"][i], h, cfg)
+            if want_cache:
+                cache_out["blocks"].append(
+                    {"c": st[0], "n": st[1], "h": st[2]})
+        elif kind == "shared_attn":
+            a, kv = attn_mod.attention(params["shared_attn"], h, cfg,
+                                       positions, window=cfg.sliding_window)
+            y = a + mlp(params["shared_mlp"],
+                        rms_norm(x + a, params["block_norms"][i],
+                                 cfg.norm_eps), cfg.act)
+            if want_cache:
+                w = kv[0].shape[1]
+                cache_out["blocks"].append(
+                    {"k": kv[0].astype(jnp.bfloat16),
+                     "v": kv[1].astype(jnp.bfloat16)})
+        x = _pin_dp(x + y)
+    return _unembed(params, cfg, x), aux, cache_out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ArchConfig, cache, tokens=None, embeds=None,
+                cache_len=None):
+    """One-token decode.  tokens [B,1] / embeds [B,1,d]; cache_len i32[].
+    Returns (logits [B,1,V] f32, new_cache)."""
+    x = _embed(params, cfg, tokens, embeds)
+    B = x.shape[0]
+
+    if _is_uniform(cfg):
+        def body(x, lp_cache):
+            lp, ck = lp_cache
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            if cfg.mla is not None:
+                a, c1, c2 = attn_mod.mla_decode(
+                    lp["attn"], h, ck["c_kv"], ck["k_pe"], cache_len, cfg)
+                new_ck = {"c_kv": c1, "k_pe": c2}
+            elif cfg.kv_quant_bits:
+                a, k2, v2, ks2, vs2 = attn_mod.attention_decode(
+                    lp["attn"], h, ck["k"], ck["v"], cache_len, cfg,
+                    window=cfg.sliding_window, cache_ks=ck["k_scale"],
+                    cache_vs=ck["v_scale"])
+                new_ck = {"k": k2, "v": v2, "k_scale": ks2, "v_scale": vs2}
+            else:
+                a, k2, v2 = attn_mod.attention_decode(
+                    lp["attn"], h, ck["k"], ck["v"], cache_len, cfg,
+                    window=cfg.sliding_window)
+                new_ck = {"k": k2, "v": v2}
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                f, _ = moe_mod.moe_mlp(lp["moe"], h, cfg, cfg.act)
+            else:
+                f = mlp(lp["mlp"], h, cfg.act)
+            return x + f, new_ck
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        return _unembed(params, cfg, x), new_cache
+
+    if _is_grouped(cfg):
+        G, per, tail = _group_layout(cfg)
+
+        def dec_mamba(x, mp, norm, ck):
+            h = rms_norm(x, norm, cfg.norm_eps)
+            y, st, conv = ssm_mod.mamba_block(
+                mp, h, cfg, state=ck["state"], conv_cache=ck["conv"])
+            return x + y, {"state": st,
+                           "conv": jax.tree.map(
+                               lambda a: a.astype(jnp.bfloat16), conv)}
+
+        def group_body(x, gp_ck):
+            gp, gc = gp_ck
+            new_m = []
+            for j in range(per):
+                mp = jax.tree.map(lambda a: a[j], gp["mamba"])
+                mc = jax.tree.map(lambda a: a[j], gc["mamba"])
+                x, nm = dec_mamba(x, mp, gp["norms"][j], mc)
+                new_m.append(nm)
+            h = rms_norm(x, gp["norms"][per], cfg.norm_eps)
+            a, k2, v2 = attn_mod.attention_decode(
+                params["shared_attn"], h, gc["k"], gc["v"], cache_len, cfg,
+                window=cfg.sliding_window)
+            y = a + mlp(params["shared_mlp"],
+                        rms_norm(x + a, gp["norms"][per], cfg.norm_eps),
+                        cfg.act)
+            x = x + y
+            stacked_m = jax.tree.map(lambda *t: jnp.stack(t), *new_m)
+            return x, {"mamba": stacked_m, "k": k2, "v": v2}
+
+        x, new_groups = jax.lax.scan(
+            group_body, x, (params["groups"], cache["groups"]))
+        new_cache = {"groups": new_groups}
+        if tail:
+            new_t = []
+            for j in range(tail):
+                mp = jax.tree.map(lambda a: a[j], params["tail"]["mamba"])
+                mc = jax.tree.map(lambda a: a[j], cache["tail"])
+                x, nm = dec_mamba(x, mp, params["tail"]["norms"][j], mc)
+                new_t.append(nm)
+            new_cache["tail"] = jax.tree.map(lambda *t: jnp.stack(t), *new_t)
+        return _unembed(params, cfg, x), new_cache
+
+    new_cache = {"blocks": []}
+    for i, kind in enumerate(cfg.block_pattern):
+        h = rms_norm(x, params["block_norms"][i], cfg.norm_eps)
+        ck = cache["blocks"][i]
+        if kind == "mamba":
+            y, st, conv = ssm_mod.mamba_block(
+                params["blocks"][i], h, cfg, state=ck["state"],
+                conv_cache=ck["conv"])
+            new_cache["blocks"].append(
+                {"state": st,
+                 "conv": jax.tree.map(
+                     lambda a: a.astype(jnp.bfloat16), conv)})
+        elif kind == "mlstm":
+            y, st = xlstm_mod.mlstm_block(params["blocks"][i], h, cfg,
+                                          state=ck["C"])
+            new_cache["blocks"].append({"C": st})
+        elif kind == "slstm":
+            y, st = xlstm_mod.slstm_block(params["blocks"][i], h, cfg,
+                                          state=(ck["c"], ck["n"], ck["h"]))
+            new_cache["blocks"].append({"c": st[0], "n": st[1], "h": st[2]})
+        elif kind == "shared_attn":
+            a, k2, v2 = attn_mod.attention_decode(
+                params["shared_attn"], h, ck["k"], ck["v"], cache_len, cfg,
+                window=cfg.sliding_window)
+            y = a + mlp(params["shared_mlp"],
+                        rms_norm(x + a, params["block_norms"][i],
+                                 cfg.norm_eps), cfg.act)
+            new_cache["blocks"].append({"k": k2, "v": v2})
+        x = x + y
+    return _unembed(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss / steps
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ArchConfig, batch, aux_weight: float = 0.01):
+    logits, aux, _ = forward(params, cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux_weight * aux
+
+
+def input_specs(cfg: ArchConfig, kind: str, seq: int, batch: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    f = jax.ShapeDtypeStruct
+    stub = cfg.frontend is not None
+    if kind == "train":
+        specs = {"labels": f((batch, seq), jnp.int32)}
+        if stub:
+            specs["embeds"] = f((batch, seq, cfg.d_model), jnp.bfloat16)
+        else:
+            specs["tokens"] = f((batch, seq), jnp.int32)
+        return specs
+    if kind == "prefill":
+        if stub:
+            return {"embeds": f((batch, seq, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": f((batch, seq), jnp.int32)}
+    if kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+        specs = {"cache": cache, "cache_len": f((), jnp.int32)}
+        if stub:
+            specs["embeds"] = f((batch, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            specs["tokens"] = f((batch, 1), jnp.int32)
+        return specs
+    raise ValueError(kind)

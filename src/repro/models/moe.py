@@ -1,0 +1,78 @@
+"""Mixture-of-experts layer: top-k routing, sort-based grouped matmul
+(jax.lax.ragged_dot), optional shared experts (DeepSeek-V2).
+
+Expert parallelism: expert weight tensors carry a leading num_experts axis
+that the sharding rules place on the ``model`` mesh axis; token routing
+crosses shards via the all-to-all XLA inserts for the sort/gather pattern
+under GSPMD.  Router runs in f32 for numerical stability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    E, d, f = m.num_experts, cfg.d_model, m.d_ff_expert
+
+    def experts(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) /
+                jnp.sqrt(shape[1])).astype(dt)
+
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": experts(ks[1], (E, d, f)),
+        "w_up": experts(ks[2], (E, d, f)),
+        "w_down": experts(ks[3], (E, f, d)),
+    }
+    if m.num_shared_experts:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=f * m.num_shared_experts)
+    return p
+
+
+def moe_mlp(params, x, cfg, act: str = "silu"):
+    """x: [B, S, d] -> ([B, S, d], aux_loss).  Dropless sort-based dispatch."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])       # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)               # [T, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary, from tensors already in hand
+    frac_tokens = jnp.zeros((m.num_experts,), jnp.float32).at[
+        top_e[:, 0]].add(1.0) / T
+    aux = m.num_experts * jnp.sum(frac_tokens * jnp.mean(probs, axis=0))
+
+    # flatten (token, k) pairs and sort by expert id -> grouped layout
+    flat_e = top_e.reshape(-1)                                  # [T*K]
+    flat_t = jnp.repeat(jnp.arange(T), m.top_k)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)
+    xs = xt[flat_t[order]]                                      # [T*K, d]
+    group_sizes = jnp.bincount(flat_e, length=m.num_experts)
+
+    gate = jax.lax.ragged_dot(xs, params["w_gate"], group_sizes)
+    up = jax.lax.ragged_dot(xs, params["w_up"], group_sizes)
+    hidden = (jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)) * up
+    out = jax.lax.ragged_dot(hidden, params["w_down"], group_sizes)
+
+    # combine: unsort and weighted scatter-add back to tokens
+    out = out * flat_p[order][:, None].astype(out.dtype)
+    combined = jnp.zeros((T, d), out.dtype).at[flat_t[order]].add(out)
+
+    if m.num_shared_experts:
+        from repro.models.layers import mlp
+
+        combined = combined + mlp(params["shared"], xt, act)
+    return combined.reshape(B, S, d), aux

@@ -1,0 +1,152 @@
+"""Mamba2-style selective state-space block (chunked SSD formulation).
+
+Train/prefill: the SSD algorithm — within-chunk terms via attention-like
+matmuls (chunk x chunk, MXU-friendly), across-chunk recurrence via a small
+scan over chunk-boundary states.  Decode: O(1) recurrent update — the
+reason ssm/hybrid archs run the long_500k cell (DESIGN.md §4).
+
+Recurrence per head h, channel p, state n (B/C shared across heads as in
+Mamba2):   H_t = exp(dt_t A_h) H_{t-1} + dt_t B_t x_t ;  y_t = C_t . H_t
+
+Weights are kept head-major ([d, H, hd] / [H, hd, d]) so tensor parallelism
+shards the head axis cleanly (same convention as attention.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of, rms_norm
+
+
+def init_mamba(key, cfg):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    H = cfg.num_heads
+    hd = inner // H
+    ks = jax.random.split(key, 7)
+    import numpy as np
+
+    sc = 1.0 / np.sqrt(d)
+    return {
+        "w_z": dense_init(ks[0], (d, H, hd), dt, scale=sc),   # gate
+        "w_x": dense_init(ks[1], (d, H, hd), dt, scale=sc),
+        "w_B": dense_init(ks[2], (d, n), dt, scale=sc),
+        "w_C": dense_init(ks[3], (d, n), dt, scale=sc),
+        "w_dt": dense_init(ks[4], (d, H), dt, scale=sc),
+        "conv_x": (jax.random.normal(ks[5], (cfg.ssm_conv, H, hd),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_B": jnp.zeros((cfg.ssm_conv, n), dt),
+        "conv_C": jnp.zeros((cfg.ssm_conv, n), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((H, hd), jnp.float32),
+        "w_out": dense_init(ks[6], (H, hd, d), dt,
+                            scale=1.0 / np.sqrt(inner)),
+    }
+
+
+def _causal_conv(u, w, cache=None):
+    """Depthwise causal conv1d over axis 1.  u: [B,S,...ch]; w: [K,...ch];
+    cache: [B, K-1, ...ch] trailing context."""
+    K = w.shape[0]
+    if cache is not None:
+        full = jnp.concatenate([cache.astype(u.dtype), u], axis=1)
+    else:
+        pad = [(0, 0)] * u.ndim
+        pad[1] = (K - 1, 0)
+        full = jnp.pad(u, pad)
+    new_cache = full[:, -(K - 1):] if K > 1 else full[:, :0]
+    out = sum(full[:, i:i + u.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out), new_cache
+
+
+def mamba_block(params, x, cfg, state=None, conv_cache=None,
+                chunk: int = 128):
+    """x: [B, S, d] -> (y [B, S, d], final_state [B,H,hd,n], conv_caches).
+
+    conv_cache: dict of {x, B, C} trailing contexts (decode) or None.
+    """
+    B, S, d = x.shape
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    H = cfg.num_heads
+    hd = inner // H
+
+    z = jnp.einsum("bsd,dhk->bshk", x, params["w_z"])
+    xr = jnp.einsum("bsd,dhk->bshk", x, params["w_x"])
+    Br = x @ params["w_B"]
+    Cr = x @ params["w_C"]
+    dt_raw = x @ params["w_dt"]
+
+    cc = conv_cache or {}
+    xr, cx = _causal_conv(xr, params["conv_x"], cc.get("x"))
+    Br, cB = _causal_conv(Br, params["conv_B"], cc.get("B"))
+    Cr, cC = _causal_conv(Cr, params["conv_C"], cc.get("C"))
+    new_conv = {"x": cx, "B": cB, "C": cC}
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                                  # [H]
+    xh = xr.astype(jnp.float32)                                    # [B,S,H,hd]
+    Bf = Br.astype(jnp.float32)
+    Cf = Cr.astype(jnp.float32)
+
+    if S == 1 and state is not None:
+        decay = jnp.exp(dt[:, 0] * A)                              # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], Bf[:, 0])
+        new_state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_state, Cf[:, 0])[:, None]
+        final_state = new_state
+    else:
+        Q = min(chunk, S)
+        assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+        c = S // Q
+        loga = (dt * A).reshape(B, c, Q, H)
+        cum = jnp.cumsum(loga, axis=2)                              # [B,c,Q,H]
+        xc = xh.reshape(B, c, Q, H, hd)
+        Bc = Bf.reshape(B, c, Q, n)
+        Cc = Cf.reshape(B, c, Q, n)
+        dtc = dt.reshape(B, c, Q, H)
+
+        # intra-chunk: y_t += sum_{s<=t} (C_t.B_s) exp(cum_t - cum_s) dt_s x_s
+        scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+        Ldec = jnp.exp(jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :],
+                                -60.0, 0.0))
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+        w = (scores[..., None] * Ldec * dtc[:, :, None, :, :] *
+             tri[None, None, :, :, None])                           # [B,c,Q,K,H]
+        y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w, xc)
+
+        # chunk-boundary states and the across-chunk scan
+        rem = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))  # [B,c,Q,H]
+        chunk_state = jnp.einsum("bcqn,bcqh,bcqh,bcqhp->bchpn",
+                                 Bc, rem, dtc, xc)
+        chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))  # [B,c,H]
+
+        h0 = state if state is not None else jnp.zeros((B, H, hd, n),
+                                                       jnp.float32)
+
+        def step(h, inp):
+            dec, st = inp
+            return h * dec[..., None, None] + st, h
+
+        hlast, hprev = jax.lax.scan(
+            step, h0, (jnp.moveaxis(chunk_decay, 1, 0),
+                       jnp.moveaxis(chunk_state, 1, 0)))
+        hprev = jnp.moveaxis(hprev, 0, 1)                           # [B,c,H,hd,n]
+        y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc,
+                             jnp.exp(jnp.clip(cum, -60.0, 0.0)), hprev)
+        y = (y_intra + y_inter).reshape(B, S, H, hd)
+        final_state = hlast
+
+    y = y + params["D"][None, None, :, None] * xh.reshape(B, S, H, hd)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = ((y32 * jax.lax.rsqrt(var + cfg.norm_eps)) *
+         (1.0 + params["norm"])).astype(x.dtype)
+    return (jnp.einsum("bshk,hkd->bsd", y, params["w_out"]),
+            final_state, new_conv)

@@ -1,0 +1,168 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent mixing), per arXiv:2405.04517 (xlstm-350m config —
+[unverified] tier, so minor structural approximations are documented).
+
+mLSTM recurrence (per head):   C_t = f_t C_{t-1} + i_t v_t k_t^T
+                               n_t = f_t n_{t-1} + i_t k_t
+                               y_t = (C_t q_t) / max(|n_t . q_t|, 1)
+— identical algebra to the SSD chunked scan (decay = f_t, update =
+i_t v_t k_t^T), so training uses the same chunked matmul scheme; the
+normalizer rides along as an extra value column (v' = [v, 1]).
+
+Approximations vs the official stack (noted in DESIGN.md): sigmoid input
+gate instead of stabilized-exp, mLSTM runs at expand-factor inner width
+with fused q/k/v, sLSTM keeps block-diagonal recurrent mixing but omits
+the post-core GLU feed-forward (config has d_ff = 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dtype_of, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * inner), dt),       # [core | gate]
+        "w_qkv": dense_init(ks[1], (inner, 3 * inner), dt),
+        "w_if": dense_init(ks[2], (inner, 2 * H), dt),       # i, f gates
+        "norm": jnp.zeros((inner,), jnp.float32),
+        "w_down": dense_init(ks[3], (inner, d), dt),
+    }
+
+
+def mlstm_block(params, x, cfg, state=None, chunk: int = 128):
+    """x: [B,S,d] -> (y, (C, n) state).  C: [B,H,hd,hd+1] (last col = n)."""
+    B, S, d = x.shape
+    inner = cfg.ssm_expand * d
+    H = cfg.num_heads
+    hd = inner // H
+
+    up = x @ params["w_up"]
+    core, gate = jnp.split(up, 2, axis=-1)
+    qkv = core @ params["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    k = k.reshape(B, S, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    v = v.reshape(B, S, H, hd).astype(jnp.float32)
+    gates = (core @ params["w_if"]).astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gates[..., :H])                     # [B,S,H]
+    logf = jax.nn.log_sigmoid(gates[..., H:])                # [B,S,H]
+
+    vn = jnp.concatenate([v, jnp.ones((B, S, H, 1), jnp.float32)], -1)
+
+    if S == 1 and state is not None:
+        decay = jnp.exp(logf[:, 0])                          # [B,H]
+        upd = jnp.einsum("bh,bhk,bhv->bhkv", i_g[:, 0], k[:, 0], vn[:, 0])
+        C = state * decay[..., None, None] + upd
+        yn = jnp.einsum("bhkv,bhk->bhv", C, q[:, 0])[:, None]  # [B,1,H,hd+1]
+        new_state = C
+    else:
+        Q = min(chunk, S)
+        assert S % Q == 0
+        c = S // Q
+        cum = jnp.cumsum(logf.reshape(B, c, Q, H), axis=2)
+        qc = q.reshape(B, c, Q, H, hd)
+        kc = k.reshape(B, c, Q, H, hd)
+        vc = vn.reshape(B, c, Q, H, hd + 1)
+        ic = i_g.reshape(B, c, Q, H)
+
+        scores = jnp.einsum("bcqhd,bckhd->bcqkh", qc, kc)
+        Ldec = jnp.exp(jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :],
+                                -60.0, 0.0))
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.float32))
+        w = scores * Ldec * ic[:, :, None, :, :] * tri[None, None, ..., None]
+        y_intra = jnp.einsum("bcqkh,bckhv->bcqhv", w, vc)
+
+        rem = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))
+        chunk_state = jnp.einsum("bcqh,bcqh,bcqhk,bcqhv->bchkv",
+                                 ic, rem, kc, vc)
+        chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))
+        h0 = state if state is not None else jnp.zeros((B, H, hd, hd + 1),
+                                                       jnp.float32)
+
+        def step(h, inp):
+            dec, st = inp
+            return h * dec[..., None, None] + st, h
+
+        hlast, hprev = jax.lax.scan(
+            step, h0, (jnp.moveaxis(chunk_decay, 1, 0),
+                       jnp.moveaxis(chunk_state, 1, 0)))
+        hprev = jnp.moveaxis(hprev, 0, 1)
+        y_inter = jnp.einsum("bcqhk,bcqh,bchkv->bcqhv", qc,
+                             jnp.exp(jnp.clip(cum, -60.0, 0.0)), hprev)
+        yn = (y_intra + y_inter).reshape(B, S, H, hd + 1)
+        new_state = hlast
+
+    y, nq = yn[..., :hd], yn[..., hd:]
+    y = y / jnp.maximum(jnp.abs(nq), 1.0)
+    y = y.reshape(B, S, inner).astype(x.dtype) * jax.nn.silu(gate)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return y @ params["w_down"], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dt),            # z, i, f, o
+        "r": (jax.random.normal(ks[1], (H, 4, hd, hd), jnp.float32) /
+              jnp.sqrt(hd)).astype(dt),                       # block-diag R
+        "norm": jnp.zeros((d,), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dt),
+    }
+
+
+def slstm_block(params, x, cfg, state=None):
+    """Sequential scan (not parallelizable: h_{t-1} feeds the gates through
+    the block-diagonal recurrent matrices).  state = (c, n, h): [B, d]."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+
+    pre = (x @ params["w_in"]).astype(jnp.float32)            # [B,S,4d]
+    r = params["r"].astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+    else:
+        c0, n0, h0 = state
+
+    def step(carry, pre_t):
+        c, n, h = carry
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhd,hgde->bhge", hh, r).reshape(B, 4, d)
+        zi = pre_t.reshape(B, 4, d) + rec
+        z = jnp.tanh(zi[:, 0])
+        i = jax.nn.sigmoid(zi[:, 1])
+        f = jax.nn.sigmoid(zi[:, 2])
+        o = jax.nn.sigmoid(zi[:, 3])
+        c2 = f * c + i * z
+        n2 = f * n + i
+        h2 = o * c2 / jnp.maximum(n2, 1.0)
+        return (c2, n2, h2), h2
+
+    (c, n, h), hs = jax.lax.scan(step, (c0, n0, h0),
+                                 jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                # [B,S,d]
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return y @ params["w_out"], (c, n, h)

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import constant, cosine_with_warmup
+from repro.optim.grad_compression import compress_grads, decompress_grads
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "constant",
+           "cosine_with_warmup", "compress_grads", "decompress_grads"]

@@ -1,0 +1,65 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Written from scratch (no optax in the container); pytree-generic so the same
+optimizer drives the GNN pillar and every LM architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any       # first moment, same pytree as params
+    nu: Any       # second moment
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.0, max_grad_norm: float | None = 1.0):
+    """One AdamW step.  ``lr`` may be a scalar or a schedule value."""
+    if max_grad_norm is not None:
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        update = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    mu = treedef.unflatten([o[0] for o in out])
+    nu = treedef.unflatten([o[1] for o in out])
+    new_params = treedef.unflatten([o[2] for o in out])
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import (FaultTolerantRunner, RunnerConfig,
+                                           StragglerMonitor)
+
+__all__ = ["FaultTolerantRunner", "RunnerConfig", "StragglerMonitor"]

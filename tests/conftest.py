@@ -1,0 +1,36 @@
+"""Shared test fixtures: random CSR graphs with controlled degree skew."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.graph import CSR, csr_from_edges
+
+
+def random_csr(rng: np.random.Generator, num_nodes: int, avg_deg: float,
+               skew: float = 1.0, weighted: bool = True) -> CSR:
+    """Power-law-ish degree graph: deg_i ~ avg_deg * pareto(skew)."""
+    raw = rng.pareto(skew, num_nodes) + 0.2 if skew else np.ones(num_nodes)
+    deg = np.minimum((raw / raw.mean() * avg_deg).astype(np.int64), num_nodes * 4)
+    src = (np.concatenate([rng.integers(0, num_nodes, d) for d in deg])
+           if deg.sum() else np.zeros(0, np.int64))
+    dst = np.repeat(np.arange(num_nodes), deg)
+    val = rng.normal(size=len(src)).astype(np.float32) if weighted else None
+    return csr_from_edges(src, dst, num_nodes, val)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(42)
+
+
+@pytest.fixture(scope="session")
+def small_graph(rng):
+    return random_csr(rng, 64, 6.0, skew=1.2)
+
+
+@pytest.fixture(scope="session")
+def skewed_graph(rng):
+    """A few very heavy rows (exercises every strategy band)."""
+    g = random_csr(rng, 96, 4.0, skew=0.7)
+    return g

@@ -1,0 +1,113 @@
+"""Per-kernel shape/dtype sweeps, each asserted allclose vs the ref.py
+pure-jnp oracle (interpret mode executes kernel bodies on CPU)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import CSR, ELL
+from repro.core.quantization import dequantize, quantize
+from repro.core.sampling import sample_csr_to_ell
+from repro.kernels import ops, ref
+
+from conftest import random_csr
+
+
+def _ell(g: CSR, W: int) -> ELL:
+    val, col = sample_csr_to_ell(g.row_ptr, g.col_ind, g.val, W)
+    return ELL(val, col, g.num_cols)
+
+
+@pytest.mark.parametrize("n,feat,W,block_r,block_f", [
+    (8, 128, 8, 8, 128),       # exact tiles
+    (37, 33, 16, 8, 128),      # ragged everything
+    (64, 256, 4, 16, 128),     # wide features
+    (130, 64, 32, 8, 32),      # small feature blocks
+    (16, 128, 1, 4, 128),      # W=1 degenerate
+])
+def test_ell_spmm_shape_sweep(rng, n, feat, W, block_r, block_f):
+    g = random_csr(rng, n, 5.0, skew=1.0)
+    b = jnp.asarray(rng.normal(size=(n, feat)).astype(np.float32))
+    ell = _ell(g, W)
+    want = ref.ell_spmm_rowloop(ell.val, ell.col, b)
+    got = ops.ell_spmm(ell, b, block_r=block_r, block_f=block_f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ell_spmm_dtype_sweep(rng, dtype):
+    g = random_csr(rng, 24, 4.0)
+    b = jnp.asarray(rng.normal(size=(24, 64))).astype(dtype)
+    ell = _ell(g, 8)
+    want = ref.ell_spmm_rowloop(ell.val, ell.col, b.astype(jnp.float32))
+    got = ops.ell_spmm(ell, b.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("W", [4, 16, 64])
+def test_aes_sample_kernel_matches_jax_sampler(rng, W):
+    g = random_csr(rng, 40, 12.0, skew=0.8)
+    want_val, want_col = sample_csr_to_ell(g.row_ptr, g.col_ind, g.val, W)
+    got = ops.aes_sample(g, W)
+    np.testing.assert_array_equal(np.asarray(got.col), np.asarray(want_col))
+    np.testing.assert_allclose(np.asarray(got.val), np.asarray(want_val))
+
+
+@pytest.mark.parametrize("n,feat,W", [(8, 128, 8), (37, 60, 16), (72, 32, 32)])
+def test_fused_kernel_matches_end_to_end_oracle(rng, n, feat, W):
+    g = random_csr(rng, n, 9.0, skew=0.8)
+    b = jnp.asarray(rng.normal(size=(n, feat)).astype(np.float32))
+    want = ref.aes_spmm(g.row_ptr, g.col_ind, g.val, b, sh_width=W)
+    got = ops.fused_aes_spmm(g, b, W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (256, 128), (100, 33), (1, 1)])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_dequant_kernel_sweep(shape, bits):
+    x = np.random.default_rng(3).normal(size=shape).astype(np.float32) * 5
+    qf = quantize(x, bits)
+    want = ref.dequantize(qf.q, qf.x_min, qf.x_max, bits)
+    got = ops.dequantize(qf.q, qf.scale, qf.x_min, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_quantized_fused_gather(rng):
+    """Beyond-paper kernel: INT8 B + in-gather dequant == dequant-then-spmm."""
+    g = random_csr(rng, 48, 6.0)
+    x = rng.normal(size=(48, 96)).astype(np.float32)
+    qf = quantize(x, 8)
+    ell = _ell(g, 16)
+    want = ref.ell_spmm_rowloop(ell.val, ell.col, dequantize(qf))
+    got = ops.ell_spmm(ell, qf.q, quantized_meta=(qf.scale, qf.x_min))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 48),
+       feat=st.integers(1, 80), w_log=st.integers(0, 6))
+def test_property_pallas_equals_oracle(seed, n, feat, w_log):
+    rng = np.random.default_rng(seed)
+    g = random_csr(rng, n, 6.0, skew=0.9)
+    b = jnp.asarray(rng.normal(size=(n, feat)).astype(np.float32))
+    W = 2**w_log
+    ell = _ell(g, W)
+    want = ref.ell_spmm_rowloop(ell.val, ell.col, b)
+    got = ops.ell_spmm(ell, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_empty_graph(rng):
+    g = random_csr(rng, 8, 0.0, skew=0.0)
+    b = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    got = ops.ell_spmm(_ell(g, 4), b)
+    np.testing.assert_array_equal(np.asarray(got), 0)

@@ -1,0 +1,170 @@
+"""Block-level unit tests: attention vs a naive per-head oracle, MoE vs a
+dense-dispatch reference, RoPE/RMSNorm properties, MLA decode-vs-prefill
+agreement, sliding-window masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, smoke_config
+from repro.models.attention import (aes_kv_indices, attention,
+                                    attention_decode, causal_mask,
+                                    init_attention, init_mla, mla_attention,
+                                    mla_decode)
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.moe import init_moe, moe_mlp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_attention(q, k, v, mask):
+    """Per-head python-loop oracle (no grouping tricks)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    out = np.zeros((B, Sq, H, D), np.float32)
+    qf, kf, vf = map(lambda t: np.asarray(t, np.float32), (q, k, v))
+    for b in range(B):
+        for h in range(H):
+            kv = h // G
+            s = qf[b, :, h] @ kf[b, :, kv].T / np.sqrt(D)
+            s = np.where(np.asarray(mask[b]), s, -1e30)
+            w = np.exp(s - s.max(-1, keepdims=True))
+            w = w / w.sum(-1, keepdims=True)
+            out[b, :, h] = w @ vf[b, :, kv]
+    return out
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 1)])
+def test_gqa_attention_vs_naive(H, KV):
+    cfg = smoke_config(get_config("tinyllama-1.1b")).with_options(
+        num_heads=H, num_kv_heads=KV, head_dim=16, attn_bias=False)
+    p = init_attention(KEY, cfg)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out, (k, v) = attention(p, x, cfg, pos)
+    # recompute q to feed the oracle
+    from repro.models.attention import _qkv
+
+    q, k2, v2 = _qkv(p, x, cfg, pos)
+    mask = jnp.broadcast_to(causal_mask(S, S, 0), (B, S, S))
+    want = naive_attention(q, k2, v2, mask)
+    got_core = np.asarray(
+        jnp.einsum("bsd,dhk->bshk", 0 * x, p["wq"]))  # shape only
+    proj = jnp.einsum("bshk,hkd->bsd",
+                      jnp.asarray(want).astype(x.dtype), p["wo"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(proj),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefill_last_token():
+    """Decoding token t with a cache seeded by prefill(0..t-1) equals the
+    full forward's last position."""
+    cfg = smoke_config(get_config("tinyllama-1.1b"))
+    p = init_attention(KEY, cfg)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, (k, v) = attention(p, x, cfg, pos)
+
+    # cache with first S-1 tokens, decode the last
+    ck = jnp.zeros((B, S, cfg.num_kv_heads, cfg.resolved_head_dim))
+    cv = jnp.zeros_like(ck)
+    ck = ck.at[:, :S - 1].set(k[:, :S - 1])
+    cv = cv.at[:, :S - 1].set(v[:, :S - 1])
+    dec, _, _ = attention_decode(p, x[:, S - 1:S], ck, cv,
+                                 jnp.int32(S - 1), cfg)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_mask():
+    m = np.asarray(causal_mask(6, 6, 0, window=3))[0]
+    assert m[5, 5] and m[5, 3] and not m[5, 2]  # window=3: attends t-2..t
+    assert not m[0, 1]                          # causal
+
+
+def test_mla_decode_matches_prefill_last_token():
+    cfg = smoke_config(get_config("deepseek-v2-236b"))
+    p = init_mla(KEY, cfg)
+    B, S = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, (c_kv, k_pe) = mla_attention(p, x, cfg, pos)
+    cc = jnp.zeros((B, S, cfg.mla.kv_lora_rank)).at[:, :S - 1].set(
+        c_kv[:, :S - 1])
+    cp = jnp.zeros((B, S, cfg.mla.rope_head_dim)).at[:, :S - 1].set(
+        k_pe[:, :S - 1])
+    dec, _, _ = mla_decode(p, x[:, S - 1:S], cc, cp, jnp.int32(S - 1), cfg)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), rtol=5e-3, atol=5e-3)
+
+
+def test_moe_vs_dense_dispatch_reference():
+    """Sort + ragged_dot dispatch == explicit per-token expert loop."""
+    cfg = smoke_config(get_config("mixtral-8x22b"))
+    p = init_moe(KEY, cfg)
+    B, S = 2, 6
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, cfg.d_model),
+                          jnp.float32)
+    out, aux = moe_mlp(p, x, cfg, "silu")
+
+    m = cfg.moe
+    xt = np.asarray(x.reshape(-1, cfg.d_model), np.float32)
+    logits = xt @ np.asarray(p["router"], np.float32)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    want = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        top = np.argsort(-probs[t])[:m.top_k]
+        ws = probs[t, top] / probs[t, top].sum()
+        for e, w in zip(top, ws):
+            wg = np.asarray(p["w_gate"][e], np.float32)
+            wu = np.asarray(p["w_up"][e], np.float32)
+            wd = np.asarray(p["w_down"][e], np.float32)
+            h = (xt[t] @ wg)
+            h = h / (1 + np.exp(-h)) * (xt[t] @ wu)
+            want[t] += w * (h @ wd)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, cfg.d_model),
+                               want, rtol=5e-2, atol=5e-2)
+    assert float(aux) > 0
+
+
+def test_rope_relative_position_property():
+    """RoPE inner products depend only on relative position."""
+    D = 16
+    q = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, D))
+
+    def dot_at(pq, pk):
+        qq = apply_rope(q, jnp.array([[pq]]), 10000.0)
+        kk = apply_rope(k, jnp.array([[pk]]), 10000.0)
+        return float(jnp.sum(qq * kk))
+
+    assert abs(dot_at(3, 1) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(0, 0) - dot_at(7, 7)) < 1e-4
+
+
+@settings(max_examples=30, deadline=None)
+@given(seq=st.integers(1, 5000), width=st.integers(1, 256))
+def test_property_aes_kv_indices_valid(seq, width):
+    idx = aes_kv_indices(seq, width)
+    assert idx.shape == (width,)
+    assert (idx >= 0).all() and (idx < seq).all()
+    assert idx[-1] == seq - 1  # recency pin
+
+
+def test_rms_norm_scale_invariance_direction():
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 8))
+    g = jnp.zeros(8)
+    a = rms_norm(x, g)
+    b = rms_norm(x * 7.0, g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,71 @@
+"""Quantization (Eq. 1-2): error bounds, bit-width sweep, properties."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QuantizedFeatures,
+    dequantize,
+    loading_bytes,
+    quantization_error,
+    quantize,
+    storage_dtype,
+)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+def test_roundtrip_error_bounded_by_one_step(bits):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(100, 32)).astype(np.float32) * 10
+    err = float(quantization_error(x, bits))
+    step = (x.max() - x.min()) / (2**bits - 1)
+    assert err <= step + 1e-5
+
+
+def test_eq1_eq2_literal():
+    """Hand-check Eq. 1 floor semantics and Eq. 2 reconstruction."""
+    x = np.array([[0.0, 0.5, 1.0]], np.float32)
+    qf = quantize(x, 8)
+    assert qf.q.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(qf.q), [[0, 127, 255]])
+    xh = np.asarray(dequantize(qf))
+    np.testing.assert_allclose(xh, [[0.0, 127 / 255, 1.0]], atol=1e-6)
+
+
+def test_constant_features_safe():
+    qf = quantize(np.full((4, 4), 3.25, np.float32), 8)
+    np.testing.assert_allclose(np.asarray(dequantize(qf)), 3.25, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8, 16]),
+       scale=st.floats(1e-3, 1e4))
+def test_property_monotone_and_bounded(seed, bits, scale):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(16, 8)) * scale).astype(np.float32)
+    qf = quantize(x, bits)
+    q = np.asarray(qf.q, np.int64)
+    assert q.min() >= 0 and q.max() <= 2**bits - 1
+    # quantization preserves ordering up to one level
+    flat = x.flatten()
+    order = np.argsort(flat)
+    assert (np.diff(q.flatten()[order]) >= -1).all()
+
+
+def test_storage_and_loading_bytes():
+    assert storage_dtype(8) == jnp.uint8
+    assert storage_dtype(16) == jnp.uint16
+    assert loading_bytes(100, 64, None) == 4 * loading_bytes(100, 64, 8)
+
+
+def test_int8_accuracy_claim_on_features():
+    """Paper: INT8 feature quantization costs <= ~0.3% accuracy.  Proxy:
+    relative feature reconstruction error is < 1% of the dynamic range."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(500, 64)).astype(np.float32)
+    qf = quantize(x, 8)
+    rel = float(quantization_error(x, 8)) / float(x.max() - x.min())
+    assert rel < 0.005
