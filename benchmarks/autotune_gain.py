@@ -1,0 +1,60 @@
+"""Auto-tuner gain report: tuned config vs fixed configs, and the
+plan-cache hit speedup (first call tunes + samples; every later call serves
+straight from the cached ELL operand).
+
+Rows:
+  * ``autotune/<ds>/fixed/<cfg>``  — steady-state SpMM of each fixed config
+    in the tuner's grid (what a hard-coded call site would pay per request);
+  * ``autotune/<ds>/tuned``        — the tuner's pick, with the gain vs the
+    median and best fixed config;
+  * ``autotune/<ds>/cache_hit``    — full ``aes_spmm(strategy="auto")``
+    round-trip on a warm cache (fingerprint + lookup + SpMM) vs the cold
+    first call (tune + sample + measure), the serve-heavy-traffic number.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn, trained
+from repro.core.aes_spmm import aes_spmm
+from repro.tuning import PlanCache, default_grid
+from repro.tuning.autotune import tune
+from repro.tuning.measure import measure_config
+
+WIDTHS = (16, 64, 128)
+
+
+def run(datasets=(("cora", 0.5), ("ogbn-proteins", 0.004))):
+    for name, scale in datasets:
+        ds, _, _ = trained(name, "gcn", scale=scale)
+        g = ds.gcn_adj
+        feats = ds.features
+
+        grid = default_grid(widths=WIDTHS)
+        fixed = {}
+        for cfg in grid:
+            m = measure_config(g, feats, cfg, warmup=1, iters=3)
+            fixed[cfg.key()] = m.spmm_us
+            emit(f"autotune/{name}/fixed/{cfg.key()}", m.spmm_us,
+                 f"sample_us={m.sample_us:.0f}")
+
+        cache = PlanCache()
+        t0 = time.perf_counter()
+        plan = tune(g, feats, grid=grid, budget=len(grid), cache=cache)
+        cold_us = (time.perf_counter() - t0) * 1e6
+
+        best_us = min(fixed.values())
+        median_us = float(np.median(list(fixed.values())))
+        emit(f"autotune/{name}/tuned", plan.measured_spmm_us,
+             f"chosen={plan.config.key()},"
+             f"gain_vs_median={median_us / max(plan.measured_spmm_us, 1e-9):.2f},"
+             f"vs_best={plan.measured_spmm_us / max(best_us, 1e-9):.2f}")
+
+        hit_us = time_fn(
+            lambda: aes_spmm(g, feats, strategy="auto", plan_cache=cache))
+        emit(f"autotune/{name}/cache_hit", hit_us,
+             f"cold_tune_us={cold_us:.0f},"
+             f"hit_speedup={cold_us / max(hit_us, 1e-9):.1f},"
+             f"hits={cache.stats.hits},misses={cache.stats.misses}")

@@ -7,8 +7,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (accuracy_vs_w, kernel_blocks, kernel_speedup,
-                            motivation, quant_loading, sampling_cdf)
+    from benchmarks import (accuracy_vs_w, autotune_gain, kernel_blocks,
+                            kernel_speedup, motivation, quant_loading,
+                            sampling_cdf)
 
     print("name,us_per_call,derived")
     sampling_cdf.run()
@@ -17,6 +18,7 @@ def main() -> None:
     quant_loading.run()
     motivation.run()
     kernel_blocks.run()
+    autotune_gain.run()
     try:
         from benchmarks import roofline
         roofline.report()

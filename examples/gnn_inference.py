@@ -2,13 +2,16 @@
 
   1. train GCN + GraphSAGE with the exact kernel (ideal accuracy),
   2. inference with AES-SpMM / ES-SpMM(AFS, SFS) across W,
-  3. INT8-quantized features on top of AES.
+  3. INT8-quantized features on top of AES,
+  4. strategy="auto": repro.tuning picks the config per graph and serves
+     later aggregations from the cached sampled plan.
 
     PYTHONPATH=src python examples/gnn_inference.py [dataset] [scale]
 """
 import sys
 
 from repro.gnn import evaluate, make_dataset, train_model
+from repro.tuning import PlanCache
 
 dataset = sys.argv[1] if len(sys.argv) > 1 else "ogbn-proteins"
 scale = float(sys.argv[2]) if len(sys.argv) > 2 else 0.004
@@ -28,4 +31,11 @@ for model in ("gcn", "graphsage"):
     q = [evaluate(ds, model, params, sh_width=w, strategy="aes",
                   quantize_bits=8) for w in (8, 16, 64, 128)]
     print(f"{'aes+int8':>10} " + " ".join(f"{a:.4f}" for a in q))
+
+    cache = PlanCache()
+    auto_acc = evaluate(ds, model, params, strategy="auto", plan_cache=cache)
+    plan = cache.plans()[0]
+    print(f"{'auto':>10} {auto_acc:.4f}  "
+          f"(tuned: {plan.config.key()}, cache "
+          f"{cache.stats.hits} hits / {cache.stats.misses} miss)")
     print()

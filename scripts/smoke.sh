@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# One-command regression gate: tier-1 tests + tuner smoke + a 2-config
+# benchmark slice.  Run from the repo root:
+#
+#   bash scripts/smoke.sh
+#
+# Catches: test regressions (kernels, sampling, gnn, tuning), a broken
+# autotune CLI / plan cache, and benchmark-path breakage — without paying
+# for the full benchmarks/run.py sweep.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== tuner: autotune --smoke =="
+python -m repro.tuning.autotune --smoke --json
+
+echo "== benchmarks: 2-config autotune_gain slice =="
+python - <<'EOF'
+from benchmarks import autotune_gain
+
+# two tiny fixed-seed configs; full sweep lives in benchmarks/run.py
+autotune_gain.WIDTHS = (16, 64)
+autotune_gain.run(datasets=(("cora", 0.2), ("ogbn-arxiv", 0.002)))
+EOF
+
+echo "smoke: all gates passed"

@@ -1,13 +1,20 @@
 """Public AES-SpMM API: the paper's contribution as one composable call.
 
     aes_spmm(csr, features, sh_width=128,
-             strategy="aes" | "afs" | "sfs" | "full",
+             strategy="auto" | "aes" | "afs" | "sfs" | "full",
              backend="ref" | "jax" | "pallas" | "pallas_fused",
              quantized=None | QuantizedFeatures)
 
 ``strategy`` selects the paper's adaptive scheme or the ES-SpMM baselines;
 ``"full"`` disables sampling (cuSPARSE/GE-SpMM role).  ``backend`` selects
 the execution path; all paths agree to float tolerance (tests assert it).
+
+``strategy="auto"`` hands the whole knob set to ``repro.tuning``: the tuner
+picks (strategy, W, backend, quant) per graph from sparsity features +
+microbenchmarks, and the sampled ELL operand is cached under the graph's
+fingerprint — repeated calls with the same graph skip sampling entirely.
+``sh_width``/``backend``/``quantized`` are then ignored (the plan carries
+its own); pass ``plan_cache`` to control cache scope (default: process-wide).
 """
 from __future__ import annotations
 
@@ -38,9 +45,15 @@ def sample(csr: CSR, sh_width: int, strategy: str = "aes",
 def aes_spmm(csr: CSR, features, sh_width: int = 128, *,
              strategy: str = "aes", backend: str = "jax",
              quantized: Optional[QuantizedFeatures] = None,
-             interpret=None):
+             interpret=None, plan_cache=None, tune_kwargs=None):
     """Sampled aggregation C = sample(A) @ B (paper Alg. 1 end to end)."""
     from repro.kernels import ops, ref
+
+    if strategy == "auto":
+        from repro.tuning.autotune import tune
+
+        plan = tune(csr, features, cache=plan_cache, **(tune_kwargs or {}))
+        return plan.run(features)
 
     if quantized is not None and backend != "pallas":
         features = dequantize(quantized)

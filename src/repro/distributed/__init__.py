@@ -1,6 +1,7 @@
+from repro.distributed.mesh_compat import abstract_mesh
 from repro.distributed.sharding import (batch_shardings, cache_shardings,
                                         dp_axes, opt_shardings,
                                         param_shardings)
 
-__all__ = ["batch_shardings", "cache_shardings", "dp_axes", "opt_shardings",
-           "param_shardings"]
+__all__ = ["abstract_mesh", "batch_shardings", "cache_shardings", "dp_axes",
+           "opt_shardings", "param_shardings"]

@@ -1,0 +1,32 @@
+"""Version-tolerant construction of ``jax.sharding.AbstractMesh``.
+
+The ``AbstractMesh`` constructor changed across JAX releases:
+
+  * older releases (e.g. 0.4.3x) take one ``shape_tuple`` argument of
+    ``((name, size), ...)`` pairs;
+  * newer releases take ``(axis_sizes, axis_names)`` positionally, mirroring
+    ``jax.make_mesh``.
+
+``abstract_mesh((16, 16), ("data", "model"))`` builds the mesh on either.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from jax.sharding import AbstractMesh
+
+
+def abstract_mesh(axis_sizes: Sequence[int],
+                  axis_names: Sequence[str]) -> AbstractMesh:
+    if len(axis_sizes) != len(axis_names):
+        raise ValueError(f"axis_sizes {axis_sizes!r} and axis_names "
+                         f"{axis_names!r} must have equal length")
+    try:
+        mesh = AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    # Some intermediate releases accept two positional args but interpret
+    # them differently — only trust the result if it round-trips.
+    if tuple(mesh.axis_names) != tuple(axis_names):
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    return mesh

@@ -14,11 +14,31 @@ from repro.gnn.train import accuracy
 
 def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
              strategy: str = "aes", backend: str = "jax",
-             quantize_bits: Optional[int] = None) -> float:
-    """Test accuracy under the given kernel configuration."""
+             quantize_bits: Optional[int] = None,
+             plan_cache=None) -> float:
+    """Test accuracy under the given kernel configuration.
+
+    ``strategy="auto"`` delegates the whole (strategy, W, backend, quant)
+    choice to ``repro.tuning``: the first aggregation tunes + caches a plan
+    for the adjacency, every later aggregation (the second GCN layer, other
+    models on the same graph, repeated evaluate calls) is a plan-cache hit
+    that reuses the sampled ELL operand.  ``sh_width``/``backend``/
+    ``quantize_bits`` are ignored in that mode.
+    """
     _, fwd, adj_name = MODELS[model]
     adj = getattr(ds, adj_name)
     feats = ds.features
+
+    if strategy == "auto":
+        from repro.core.aes_spmm import aes_spmm
+
+        def agg(csr, h):
+            return aes_spmm(csr, h, strategy="auto", plan_cache=plan_cache)
+
+        logits = fwd(params, adj, feats, agg)
+        return float(accuracy(logits, ds.labels,
+                              ds.test_mask.astype(jnp.float32)))
+
     quantized = None
     if quantize_bits is not None:
         quantized = quantize(feats, quantize_bits)

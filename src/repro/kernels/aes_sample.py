@@ -15,7 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import pltpu
 
 from repro.core.sampling import PRIME_NUM
 

@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import pltpu
 
 
 def _dequant_kernel(q_ref, out_ref, *, scale: float, x_min: float):

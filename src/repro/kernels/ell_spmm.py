@@ -26,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import pltpu
 
 
 def _ell_spmm_kernel(val_ref, col_ref, live_ref, b_ref, out_ref,

@@ -25,7 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.pallas_compat import pltpu
 
 from repro.core.sampling import PRIME_NUM, _BANDS, _R_THRESHOLDS
 
@@ -117,7 +117,9 @@ def _fused_kernel(rs_ref, nnz_ref, ci_ref, av_ref, b_ref, out_ref,
 
         @pl.when(live_w > 0)
         def _():
-            b_copy(pl.load(sh_col, (r, 0)), 0).start()
+            # jnp scalar, not a Python int: older interpret-mode pl.load
+            # requires indices with a .shape
+            b_copy(pl.load(sh_col, (r, jnp.int32(0))), 0).start()
 
         def k_body(k, acc):
             slot = jax.lax.rem(k, 2)

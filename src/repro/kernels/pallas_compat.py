@@ -1,0 +1,38 @@
+"""Version-tolerant access to the Pallas TPU namespace.
+
+The kernels are written against the current Pallas API names
+(``pltpu.MemorySpace``, ``pltpu.CompilerParams``); older JAX releases ship
+the same objects as ``TPUMemorySpace`` / ``TPUCompilerParams``.  Import
+``pltpu`` from here instead of ``jax.experimental.pallas`` and both spellings
+resolve — the kernels stay written in the modern idiom while the pinned
+container JAX keeps working.
+"""
+from __future__ import annotations
+
+import types
+
+from jax.experimental.pallas import tpu as _pltpu
+
+
+class _PltpuShim(types.ModuleType):
+    """Proxy over the real pltpu module with the name aliases resolved."""
+
+    _ALIASES = {
+        "MemorySpace": "TPUMemorySpace",
+        "CompilerParams": "TPUCompilerParams",
+        # reverse direction, in case a caller still uses the legacy names
+        "TPUMemorySpace": "MemorySpace",
+        "TPUCompilerParams": "CompilerParams",
+    }
+
+    def __getattr__(self, name):
+        try:
+            return getattr(_pltpu, name)
+        except AttributeError:
+            legacy = self._ALIASES.get(name)
+            if legacy is not None and hasattr(_pltpu, legacy):
+                return getattr(_pltpu, legacy)
+            raise
+
+
+pltpu = _PltpuShim("repro.kernels.pallas_compat.pltpu")

@@ -203,6 +203,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax returns a one-element list of dicts per module
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             text = compiled.as_text()
         result.update({
             "status": "OK",

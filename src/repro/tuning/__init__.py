@@ -1,0 +1,63 @@
+"""``repro.tuning`` — auto-tuning + plan cache for AES-SpMM.
+
+The paper's knob set (sampling ``strategy``, shared-memory width ``W``,
+execution ``backend``, feature ``quant_bits``) was hard-coded per call site.
+This subsystem picks them *per graph* and caches the result, so repeated
+inference over the same graph never re-samples or re-quantizes.
+
+Walkthrough — what happens on ``aes_spmm(csr, x, strategy="auto")``:
+
+1. **features.py** — fingerprint the CSR (blake2b over the raw arrays; the
+   plan-cache key) and extract sparsity statistics in one O(nnz) host pass:
+   log2 row-nnz histogram, degree skew (CV), tail edge mass.  The histogram
+   is enough to evaluate ``sum_r min(row_nnz_r, W)`` for any candidate W.
+
+2. **cost_model.py** — rank the candidate grid
+   (strategy x W x backend x quant) analytically, roofline-style
+   (``max(flops/peak, bytes/bw)`` — same napkin math as
+   ``benchmarks/analytic.py``).  ``full`` pays width ``max_row_nnz`` (the
+   skew blowup), sampled strategies pay ``W`` plus an accuracy proxy from
+   edge coverage, with SFS's biased window and quantization penalized.
+
+3. **measure.py** — the model is ranking-grade only, so the analytic
+   top-``budget`` candidates are timed on the live backend, split into
+   ``sample_us`` (one-time) and ``spmm_us`` (steady state); the measured
+   ordering picks the winner.
+
+4. **plan_cache.py** — the winning config *plus its prepared operand* (the
+   sampled ELL, the pre-quantized features) is stored as a ``TunedPlan``
+   under the graph fingerprint, in memory and optionally on disk
+   (``$REPRO_PLAN_CACHE_DIR``).  A hit serves straight from the operand.
+
+5. **autotune.py** — ``tune(csr, features, budget=...) -> TunedPlan``
+   orchestrates 1-4; ``python -m repro.tuning.autotune`` is the CLI
+   (``--smoke`` for CI).
+
+Entry points: ``tune``, ``TunedPlan``, ``PlanCache``, ``CandidateConfig``,
+``extract_features``, ``fingerprint``.
+"""
+from repro.tuning.cost_model import (CandidateConfig, CostEstimate,
+                                     MachineModel, default_grid, predict,
+                                     rank)
+from repro.tuning.features import (GraphFeatures, extract_features,
+                                   features_from_row_nnz, fingerprint)
+from repro.tuning.plan_cache import (PlanCache, TunedPlan, default_cache,
+                                     reset_default_cache)
+
+
+def __getattr__(name):
+    # Lazy: `python -m repro.tuning.autotune` imports this package first, and
+    # an eager autotune import there would double-load the CLI module.
+    if name == "tune":
+        from repro.tuning.autotune import tune
+
+        return tune
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "CandidateConfig", "CostEstimate", "GraphFeatures", "MachineModel",
+    "PlanCache", "TunedPlan", "default_cache", "default_grid",
+    "extract_features", "features_from_row_nnz", "fingerprint", "predict",
+    "rank", "reset_default_cache", "tune",
+]

@@ -1,0 +1,188 @@
+"""The tuner driver: ``tune(csr, features) -> TunedPlan`` and its CLI.
+
+Pipeline (one cache miss):
+
+  1. fingerprint + sparsity features (features.py, one O(nnz) host pass);
+  2. analytic ranking of the candidate grid (cost_model.py);
+  3. empirical refinement: measure the analytic top-``budget`` on the live
+     backend (measure.py) and take the measured-fastest;
+  4. prepare the plan operand — sample the ELL once, pre-quantize if the
+     winning config asks for it — and store it in the plan cache.
+
+Every subsequent call with the same graph is a cache hit: no sampling, no
+quantization, no measurement — just the SpMM over the cached operand.
+
+CLI::
+
+    python -m repro.tuning.autotune --dataset cora --scale 0.02
+    python -m repro.tuning.autotune --smoke     # tiny fixed-seed run for CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.graph import CSR
+from repro.tuning import cost_model, features as features_mod, measure
+from repro.tuning.cost_model import (CandidateConfig, DEFAULT_WIDTHS,
+                                     MachineModel, default_grid)
+from repro.tuning.plan_cache import PlanCache, TunedPlan, default_cache
+
+
+def _default_backends() -> tuple[str, ...]:
+    # Interpret-mode Pallas is orders of magnitude slower than jnp on CPU;
+    # only offer the kernel path where it actually runs compiled.
+    return ("jax", "pallas") if jax.default_backend() == "tpu" else ("jax",)
+
+
+def tune(csr: CSR, features=None, *, budget: int = 6,
+         widths: Sequence[int] = DEFAULT_WIDTHS,
+         backends: Sequence[str] | None = None,
+         quant: Sequence[Optional[int]] = (None,),
+         grid: Sequence[CandidateConfig] | None = None,
+         machine: MachineModel | None = None,
+         accuracy_weight: float = 5.0,
+         cache: PlanCache | None = None,
+         warmup: int = 1, iters: int = 3,
+         verbose: bool = False) -> TunedPlan:
+    """Pick (strategy, W, backend, quant) for ``csr`` and cache the plan.
+
+    ``budget`` bounds how many candidates are *measured* (the whole grid is
+    always ranked analytically first).  ``features`` is the dense operand the
+    SpMM will multiply; when omitted a synthetic f32[rows, 64] stands in
+    (timings stay representative because cost scales linearly in feat_dim).
+    """
+    cache = cache if cache is not None else default_cache()
+    fp = features_mod.fingerprint(csr)
+    plan = cache.get(fp)
+    if plan is not None:
+        return plan
+
+    synthetic_features = features is None
+    if synthetic_features:
+        rng = np.random.default_rng(0)
+        features = np.asarray(
+            rng.normal(size=(csr.num_rows, 64)), np.float32)
+    feats = features_mod.extract_features(
+        csr, feat_dim=int(features.shape[1]), with_fingerprint=False)
+
+    candidates = list(grid) if grid is not None else default_grid(
+        widths=widths, backends=backends or _default_backends(), quant=quant)
+    if synthetic_features:
+        # Pre-quantizing a stand-in matrix would cache an operand no real
+        # feature set can ever match — quantized plans need real features.
+        candidates = [c for c in candidates if c.quant_bits is None]
+        if not candidates:
+            raise ValueError(
+                "quantized candidate grid requires the real feature matrix "
+                "(pass `features=`)")
+    ranked = cost_model.rank(feats, candidates, machine, accuracy_weight)
+    if verbose:
+        for est in ranked:
+            print("  " + est.as_row())
+
+    measured = measure.refine(csr, features, ranked, top_k=max(budget, 1),
+                              warmup=warmup, iters=iters,
+                              accuracy_weight=accuracy_weight)
+    best = measured[0]
+    ell, quantized = measure.prepare_operand(csr, best.config, features)
+    from repro.tuning.plan_cache import features_fingerprint
+
+    plan = TunedPlan(
+        config=best.config, ell=ell, quantized=quantized, fingerprint=fp,
+        features_fp=(features_fingerprint(features)
+                     if quantized is not None else ""),
+        predicted_us=best.estimate.latency_us if best.estimate else 0.0,
+        measured_spmm_us=best.spmm_us, measured_sample_us=best.sample_us)
+    cache.put(plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(args: argparse.Namespace) -> dict:
+    from repro.gnn.datasets import SYNTHETIC_DATASETS, make_dataset
+
+    if not args.smoke and args.dataset not in SYNTHETIC_DATASETS:
+        raise SystemExit(
+            f"unknown dataset {args.dataset!r}; choose from: "
+            + ", ".join(sorted(SYNTHETIC_DATASETS)))
+
+    if args.smoke:
+        ds_name, scale, widths, budget = "cora", 0.1, (16, 32, 64), 4
+    else:
+        ds_name, scale = args.dataset, args.scale
+        widths = tuple(args.widths)
+        budget = args.budget
+
+    ds = make_dataset(ds_name, scale=scale, seed=args.seed)
+    csr = ds.gcn_adj
+    cache = PlanCache(args.cache_dir) if args.cache_dir else PlanCache()
+
+    plan = tune(csr, ds.features, budget=budget, widths=widths,
+                quant=(None, 8) if args.quant else (None,),
+                cache=cache, verbose=args.verbose)
+
+    # a second tune() with the same graph must be a pure cache hit
+    import time
+    hits_before = cache.stats.hits
+    t0 = time.perf_counter()
+    tune(csr, ds.features, cache=cache)
+    hit_us = (time.perf_counter() - t0) * 1e6
+
+    report = {
+        "dataset": ds_name,
+        "nodes": csr.num_rows,
+        "edges": csr.nnz,
+        "chosen": plan.config.to_dict(),
+        "measured_spmm_us": round(plan.measured_spmm_us, 2),
+        "measured_sample_us": round(plan.measured_sample_us, 2),
+        "predicted_us": round(plan.predicted_us, 2),
+        "cache_hit_us": round(hit_us, 2),
+        "cache_stats": {"hits": cache.stats.hits,
+                        "misses": cache.stats.misses},
+    }
+    print(json.dumps(report, indent=None if args.json else 2))
+    if args.smoke:
+        assert cache.stats.hits == hits_before + 1, \
+            "plan cache did not hit on the second tune()"
+        print("smoke: OK")
+    return report
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.tuning.autotune",
+        description="Auto-tune (strategy, W, backend, quant) for a graph "
+                    "and cache the sampled plan.")
+    p.add_argument("--dataset", default="cora",
+                   help="Table-2 dataset name (see repro.gnn.datasets)")
+    p.add_argument("--scale", type=float, default=0.02,
+                   help="node-count scale of the synthetic instance")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--widths", type=int, nargs="+",
+                   default=list(DEFAULT_WIDTHS))
+    p.add_argument("--budget", type=int, default=6,
+                   help="how many analytic top candidates to measure")
+    p.add_argument("--quant", action="store_true",
+                   help="include int8 feature quantization in the grid")
+    p.add_argument("--cache-dir", default=None,
+                   help="persist plans to this directory "
+                        "(default: in-memory, or $REPRO_PLAN_CACHE_DIR)")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny fixed-seed run + cache-hit assertion (CI)")
+    p.add_argument("--json", action="store_true",
+                   help="single-line JSON output")
+    p.add_argument("--verbose", action="store_true",
+                   help="print the analytic ranking table")
+    _run_cli(p.parse_args(argv))
+
+
+if __name__ == "__main__":
+    main()

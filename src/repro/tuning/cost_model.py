@@ -1,0 +1,154 @@
+"""Analytic latency / accuracy-proxy model over candidate SpMM configs.
+
+Same napkin-math discipline as ``benchmarks/analytic.py``: per-config FLOPs
+and HBM bytes from the sparsity statistics, rooflined against a
+``MachineModel`` (``time = max(flops/peak, bytes/bw) + overhead``).  The
+model's job is *ranking*, not absolute microseconds — ``measure.py`` refines
+the top of the ranking on the live backend, so only the ordering of
+clearly-separated candidates must be right.
+
+Latency structure per strategy:
+
+  * sampled strategies (aes/afs/sfs) touch ``rows * W`` ELL slots; per-slot
+    index cost differs (sfs: boundary check only; afs: one divide per
+    element; aes: hash + strided scatter) — the paper's §2.4 cost ordering;
+  * ``full`` pads every row to ``max_row_nnz`` — exact, but on skewed graphs
+    the pad width explodes (the motivation figure), which is precisely what
+    the model must see to prefer sampling on heavy-tailed inputs;
+  * quantized features cut the gather's bytes by 4x (int8) / 2x (int16) at
+    a small dequant cost (fused into the gather on the pallas backend).
+
+Accuracy proxy: edge coverage ``sum_r min(nnz_r, W) / nnz`` shaped by a
+concave response (GNN accuracy degrades slowly in dropped edges — paper
+Fig. 6), a strategy-quality factor (SFS's window is biased, paper §2.4),
+and a quantization penalty (paper: <= 0.3% for int8).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Iterable, Optional, Sequence
+
+from repro.tuning.features import GraphFeatures
+
+STRATEGIES = ("aes", "afs", "sfs", "full")
+BACKENDS = ("jax", "pallas")
+DEFAULT_WIDTHS = (16, 32, 64, 128, 256)
+
+
+@dataclass(frozen=True, order=True)
+class CandidateConfig:
+    """One point in the tuner's search grid (hashable, JSON-friendly)."""
+
+    strategy: str                      # aes | afs | sfs | full
+    sh_width: int                      # ignored (0) for strategy="full"
+    backend: str = "jax"               # jax | pallas  (ELL execution path)
+    quant_bits: Optional[int] = None   # None | 8 | 16
+
+    def key(self) -> str:
+        q = "f32" if self.quant_bits is None else f"int{self.quant_bits}"
+        return f"{self.strategy}-w{self.sh_width}-{self.backend}-{q}"
+
+    def to_dict(self) -> dict:
+        return {"strategy": self.strategy, "sh_width": self.sh_width,
+                "backend": self.backend, "quant_bits": self.quant_bits}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CandidateConfig":
+        return cls(strategy=d["strategy"], sh_width=int(d["sh_width"]),
+                   backend=d.get("backend", "jax"),
+                   quant_bits=d.get("quant_bits"))
+
+
+@dataclass(frozen=True)
+class MachineModel:
+    """Roofline constants.  Defaults are deliberately generic — ranking only
+    depends on their ratios, and measurement recalibrates the winners."""
+
+    peak_flops: float = 2.0e12          # FLOP/s the SpMM path can sustain
+    hbm_bw: float = 4.0e11              # bytes/s
+    launch_overhead_us: float = 30.0    # per kernel call
+    # per-ELL-slot sampling cost in ns (index math; paper §2.4 ordering)
+    sample_cost_ns: dict = field(default_factory=lambda: {
+        "sfs": 0.5, "afs": 1.5, "aes": 1.0, "full": 0.25})
+
+
+@dataclass(frozen=True)
+class CostEstimate:
+    config: CandidateConfig
+    latency_us: float        # steady-state SpMM over the (cached) operand
+    sample_us: float         # one-time sampling pre-pass (amortized by cache)
+    accuracy_proxy: float    # in (0, 1]; 1.0 == exact aggregation
+    score: float             # lower is better
+
+    def as_row(self) -> str:
+        return (f"{self.config.key():>24} lat={self.latency_us:9.1f}us "
+                f"sample={self.sample_us:8.1f}us acc~{self.accuracy_proxy:.3f} "
+                f"score={self.score:9.1f}")
+
+
+def _ell_width(feats: GraphFeatures, cfg: CandidateConfig) -> int:
+    return feats.max_row_nnz if cfg.strategy == "full" else cfg.sh_width
+
+
+def predict(feats: GraphFeatures, cfg: CandidateConfig,
+            machine: MachineModel | None = None,
+            accuracy_weight: float = 5.0) -> CostEstimate:
+    """Analytic (latency, accuracy proxy, score) for one candidate."""
+    m = machine or MachineModel()
+    W = max(_ell_width(feats, cfg), 1)
+    rows, F = feats.num_rows, feats.feat_dim
+    slots = rows * W                       # padded ELL slots the SpMM scans
+    live = feats.sum_min_nnz(W)            # slots that carry an edge
+
+    # --- steady-state SpMM over the ELL operand --------------------------
+    flops = 2.0 * slots * F
+    feat_bytes = 4 if cfg.quant_bits is None else max(cfg.quant_bits // 8, 1)
+    gather_bytes = live * F * feat_bytes   # B-row fetches (the hot loop)
+    operand_bytes = slots * 8              # val f32 + col i32
+    out_bytes = rows * F * 4
+    dequant_flops = 2.0 * live * F if cfg.quant_bits is not None else 0.0
+    busy_s = max((flops + dequant_flops) / m.peak_flops,
+                 (gather_bytes + operand_bytes + out_bytes) / m.hbm_bw)
+    latency_us = busy_s * 1e6 + m.launch_overhead_us
+
+    # --- one-time sampling pre-pass (skipped on plan-cache hits) ---------
+    sample_us = (slots * m.sample_cost_ns[cfg.strategy]) * 1e-3 \
+        + m.launch_overhead_us
+
+    # --- accuracy proxy --------------------------------------------------
+    coverage = feats.covered_edge_frac(W)
+    quality = {"aes": 0.97, "afs": 1.0, "sfs": 0.80, "full": 1.0}[cfg.strategy]
+    if cfg.strategy == "full" or coverage >= 1.0:
+        acc = 1.0
+    else:
+        # concave response: dropping the last edges costs little (Fig. 6)
+        acc = (coverage ** 0.25) * (quality + (1 - quality) * coverage)
+    if cfg.quant_bits is not None:
+        acc *= 1.0 - (0.003 if cfg.quant_bits <= 8 else 0.0005)
+
+    score = latency_us * (1.0 + accuracy_weight * (1.0 - acc))
+    return CostEstimate(config=cfg, latency_us=latency_us,
+                        sample_us=sample_us, accuracy_proxy=acc, score=score)
+
+
+def default_grid(widths: Sequence[int] = DEFAULT_WIDTHS,
+                 backends: Sequence[str] = ("jax",),
+                 quant: Sequence[Optional[int]] = (None,),
+                 include_full: bool = True) -> list[CandidateConfig]:
+    """The tuner's candidate grid: strategies x W x backend x quant."""
+    grid = [CandidateConfig(s, w, b, q)
+            for s, w, b, q in itertools.product(
+                ("aes", "afs", "sfs"), widths, backends, quant)]
+    if include_full:
+        grid += [CandidateConfig("full", 0, b, q)
+                 for b, q in itertools.product(backends, quant)]
+    return grid
+
+
+def rank(feats: GraphFeatures, candidates: Iterable[CandidateConfig],
+         machine: MachineModel | None = None,
+         accuracy_weight: float = 5.0) -> list[CostEstimate]:
+    """All candidates, best (lowest score) first."""
+    ests = [predict(feats, c, machine, accuracy_weight) for c in candidates]
+    return sorted(ests, key=lambda e: e.score)

@@ -1,0 +1,117 @@
+"""Empirical microbench harness: time candidate configs on the live backend.
+
+The analytic model (cost_model.py) is ranking-grade, not microsecond-grade —
+interpret-mode Pallas on CPU, XLA fusion, and cache effects all move real
+numbers.  So the tuner measures its top-k analytic candidates here and lets
+the measured ordering override the model.
+
+Two timings per candidate, matching the plan-cache split:
+
+  * ``sample_us`` — the one-time pre-pass (CSR -> ELL [+ quantize]), paid on
+    a cache miss only;
+  * ``spmm_us``  — the steady-state aggregation over the prepared operand,
+    paid on every request.  The tuner ranks on this.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import CSR, ELL, pad_csr_to_ell
+from repro.core.quantization import QuantizedFeatures, dequantize, quantize
+from repro.tuning.cost_model import CandidateConfig, CostEstimate
+
+
+def time_us(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time in microseconds, blocking on JAX outputs."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return float(ts[len(ts) // 2])
+
+
+def prepare_operand(csr: CSR, cfg: CandidateConfig,
+                    features) -> tuple[ELL, QuantizedFeatures | None]:
+    """The cache-miss work: sample (or pad) the ELL, optionally quantize."""
+    from repro.core.aes_spmm import sample
+
+    if cfg.strategy == "full":
+        ell = pad_csr_to_ell(csr)
+    else:
+        ell = sample(csr, cfg.sh_width, cfg.strategy, backend=cfg.backend)
+    q = quantize(features, cfg.quant_bits) if cfg.quant_bits is not None \
+        else None
+    return ell, q
+
+
+def run_operand(ell: ELL, features, cfg: CandidateConfig,
+                q: QuantizedFeatures | None = None):
+    """The per-request work: SpMM over a prepared (cached) operand."""
+    from repro.kernels import ref
+
+    if cfg.backend == "pallas":
+        from repro.kernels import ops
+
+        if q is not None:
+            return ops.ell_spmm(ell, q.q, quantized_meta=(q.scale, q.x_min))
+        return ops.ell_spmm(ell, features)
+    x = dequantize(q) if q is not None else features
+    return ref.ell_spmm_rowloop(ell.val, ell.col, x)
+
+
+@dataclass
+class Measurement:
+    config: CandidateConfig
+    spmm_us: float
+    sample_us: float
+    estimate: CostEstimate | None = None
+
+    @property
+    def first_call_us(self) -> float:
+        return self.spmm_us + self.sample_us
+
+
+def measure_config(csr: CSR, features, cfg: CandidateConfig, *,
+                   warmup: int = 1, iters: int = 3) -> Measurement:
+    """Time one candidate end to end on the live backend."""
+    sample_us = time_us(lambda: prepare_operand(csr, cfg, features)[0],
+                        warmup=warmup, iters=iters)
+    ell, q = prepare_operand(csr, cfg, features)
+    spmm_us = time_us(run_operand, ell, features, cfg, q,
+                      warmup=warmup, iters=iters)
+    return Measurement(config=cfg, spmm_us=spmm_us, sample_us=sample_us)
+
+
+def refine(csr: CSR, features, estimates: Sequence[CostEstimate], *,
+           top_k: int = 6, warmup: int = 1, iters: int = 3,
+           accuracy_weight: float = 5.0) -> list[Measurement]:
+    """Measure the analytic top-k; return them sorted by *measured score*.
+
+    The analytic ranking decides *which* configs are worth timing; the
+    measurement replaces the model's latency, but the winner is still
+    picked by the full objective — measured latency x the analytic
+    accuracy penalty.  Ranking on raw ``spmm_us`` alone would always crown
+    the smallest-W (lowest-coverage) candidate of the measured set.
+    """
+    out = []
+    for est in estimates[:top_k]:
+        m = measure_config(csr, features, est.config,
+                           warmup=warmup, iters=iters)
+        m.estimate = est
+        out.append(m)
+
+    def measured_score(m: Measurement) -> float:
+        acc = m.estimate.accuracy_proxy if m.estimate is not None else 1.0
+        return m.spmm_us * (1.0 + accuracy_weight * (1.0 - acc))
+
+    out.sort(key=measured_score)
+    return out

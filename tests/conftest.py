@@ -1,10 +1,59 @@
-"""Shared test fixtures: random CSR graphs with controlled degree skew."""
+"""Shared test fixtures: random CSR graphs with controlled degree skew.
+
+Also installs a ``hypothesis`` shim when the real package is absent (it is
+optional — see requirements-dev.txt): property-based tests then collect but
+individually skip, instead of killing collection for the whole suite.
+"""
 from __future__ import annotations
+
+import sys
+import types
 
 import numpy as np
 import pytest
 
+try:  # pragma: no cover - exercised only where hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    def _skip_given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (see requirements-dev.txt)"
+            )(fn)
+        return deco
+
+    def _identity_settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stands in for any ``st.*`` strategy builder at decoration time."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _AnyStrategy()  # type: ignore[attr-defined]
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _skip_given
+    _hyp.settings = _identity_settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = _AnyStrategy()
+    _hyp.assume = lambda *a, **k: True
+    _hyp.note = lambda *a, **k: None
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 from repro.core.graph import CSR, csr_from_edges
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running subprocess/compile tests")
 
 
 def random_csr(rng: np.random.Generator, num_nodes: int, avg_deg: float,

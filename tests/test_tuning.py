@@ -1,0 +1,291 @@
+"""Auto-tuning + plan-cache subsystem tests (repro.tuning).
+
+Covers the ISSUE's required cases: cost-model ranking direction on dense-vs-
+heavy-tailed degree profiles, bit-identical ELL on a fingerprint hit, and
+``strategy="auto"`` matching the explicitly-configured ``aes_spmm`` call for
+the chosen config — plus fingerprint sensitivity, disk round-trip, and the
+"second call skips sampling" acceptance gate.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.aes_spmm import aes_spmm
+from repro.core.graph import pad_csr_to_ell
+from repro.tuning import (CandidateConfig, PlanCache, default_grid,
+                          extract_features, features_from_row_nnz,
+                          fingerprint, rank, tune)
+from repro.tuning.measure import prepare_operand, run_operand
+
+from conftest import random_csr
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def _rank_keys(feats, candidates):
+    return [e.config.key() for e in rank(feats, candidates)]
+
+
+def test_cost_model_prefers_full_on_tiny_dense_rows():
+    """Uniform tiny rows: padding to max_row_nnz is free and exact, so
+    ``full`` must outrank every sampled strategy."""
+    feats = features_from_row_nnz([4] * 10_000, num_cols=10_000)
+    order = _rank_keys(feats, [CandidateConfig("full", 0),
+                               CandidateConfig("aes", 128),
+                               CandidateConfig("aes", 16)])
+    assert order[0] == "full-w0-jax-f32"
+
+
+def test_cost_model_prefers_aes_on_heavy_tailed_rows():
+    """Heavy tail: full's pad width explodes to max_row_nnz, sampling wins."""
+    row_nnz = [10] * 99_000 + [10_000] * 1_000
+    feats = features_from_row_nnz(row_nnz, num_cols=100_000)
+    order = _rank_keys(feats, [CandidateConfig("full", 0),
+                               CandidateConfig("aes", 128)])
+    assert order[0] == "aes-w128-jax-f32"
+    assert order[-1] == "full-w0-jax-f32"
+
+
+def test_cost_model_accuracy_proxy_ordering():
+    """At equal W on a truncating graph: biased SFS < AES <= AFS <= full."""
+    feats = features_from_row_nnz([400] * 1_000, num_cols=1_000)
+    est = {s: next(iter(rank(feats, [CandidateConfig(s, 64)])))
+           for s in ("aes", "afs", "sfs")}
+    full = next(iter(rank(feats, [CandidateConfig("full", 0)])))
+    assert full.accuracy_proxy == 1.0
+    assert est["sfs"].accuracy_proxy < est["aes"].accuracy_proxy
+    assert est["aes"].accuracy_proxy <= est["afs"].accuracy_proxy <= 1.0
+
+
+def test_cost_model_quant_cuts_gather_bytes():
+    feats = features_from_row_nnz([500] * 2_000, num_cols=2_000, feat_dim=256)
+    [f32] = rank(feats, [CandidateConfig("aes", 128, quant_bits=None)])
+    [int8] = rank(feats, [CandidateConfig("aes", 128, quant_bits=8)])
+    assert int8.latency_us < f32.latency_us
+    assert int8.accuracy_proxy < f32.accuracy_proxy
+
+
+# ---------------------------------------------------------------------------
+# features / fingerprint
+# ---------------------------------------------------------------------------
+
+def test_extract_features_basic_stats(rng):
+    g = random_csr(rng, 200, 8.0, skew=0.8)
+    feats = extract_features(g, feat_dim=32)
+    row_nnz = np.asarray(g.row_ptr[1:]) - np.asarray(g.row_ptr[:-1])
+    assert feats.num_rows == 200
+    assert feats.nnz == int(row_nnz.sum())
+    assert feats.max_row_nnz == int(row_nnz.max())
+    assert feats.covered_edge_frac(feats.max_row_nnz) == pytest.approx(1.0)
+    # coverage is monotone in W
+    covs = [feats.covered_edge_frac(w) for w in (4, 16, 64, 256)]
+    assert covs == sorted(covs)
+    assert len(feats.fingerprint) == 32
+
+
+def test_fingerprint_sensitivity(rng):
+    g = random_csr(rng, 50, 5.0)
+    fp = fingerprint(g)
+    assert fp == fingerprint(g)  # deterministic
+    bumped = g._replace(val=g.val.at[0].add(1.0))
+    assert fingerprint(bumped) != fp  # value change
+    swapped = g._replace(col_ind=jnp.roll(g.col_ind, 1))
+    assert fingerprint(swapped) != fp  # structure change
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def _quick_tune(csr, x, cache, **kw):
+    kw.setdefault("widths", (16, 32))
+    kw.setdefault("budget", 2)
+    kw.setdefault("warmup", 0)
+    kw.setdefault("iters", 1)
+    return tune(csr, x, cache=cache, **kw)
+
+
+def test_plan_cache_hit_returns_identical_ell(rng):
+    g = random_csr(rng, 60, 6.0, skew=0.9)
+    x = jnp.asarray(rng.normal(size=(60, 16)).astype(np.float32))
+    cache = PlanCache()
+    p1 = _quick_tune(g, x, cache)
+    p2 = _quick_tune(g, x, cache)
+    assert p2 is p1
+    assert cache.stats.misses == 1 and cache.stats.hits == 1
+    np.testing.assert_array_equal(np.asarray(p1.ell.val),
+                                  np.asarray(p2.ell.val))
+    np.testing.assert_array_equal(np.asarray(p1.ell.col),
+                                  np.asarray(p2.ell.col))
+
+
+def test_plan_cache_second_call_skips_sampling(rng, monkeypatch):
+    """Acceptance gate: a warm-cache auto call must never re-sample."""
+    import repro.tuning.measure as measure_mod
+
+    g = random_csr(rng, 40, 5.0)
+    x = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    cache = PlanCache()
+    want = aes_spmm(g, x, strategy="auto", plan_cache=cache,
+                    tune_kwargs=dict(widths=(16,), budget=1,
+                                     warmup=0, iters=1))
+
+    def boom(*a, **k):
+        raise AssertionError("sampling ran on a warm plan cache")
+
+    monkeypatch.setattr(measure_mod, "prepare_operand", boom)
+    got = aes_spmm(g, x, strategy="auto", plan_cache=cache)
+    assert cache.stats.hits == 1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_plan_cache_disk_round_trip(rng, tmp_path):
+    g = random_csr(rng, 48, 6.0)
+    x = jnp.asarray(rng.normal(size=(48, 16)).astype(np.float32))
+    c1 = PlanCache(cache_dir=tmp_path)
+    plan = _quick_tune(g, x, c1, quant=(8,))
+    assert plan.quantized is not None
+
+    c2 = PlanCache(cache_dir=tmp_path)  # fresh process simulation
+    loaded = c2.get(plan.fingerprint)
+    assert loaded is not None and c2.stats.disk_hits == 1
+    assert loaded.config == plan.config
+    np.testing.assert_array_equal(np.asarray(loaded.ell.val),
+                                  np.asarray(plan.ell.val))
+    np.testing.assert_array_equal(np.asarray(loaded.ell.col),
+                                  np.asarray(plan.ell.col))
+    np.testing.assert_array_equal(np.asarray(loaded.quantized.q),
+                                  np.asarray(plan.quantized.q))
+    np.testing.assert_allclose(np.asarray(loaded.run(x)),
+                               np.asarray(plan.run(x)), rtol=1e-6, atol=1e-6)
+
+
+def test_quantized_plan_rejects_different_features(rng):
+    """A cached pre-quantized matrix must only serve the exact feature
+    matrix it encodes — same-shape different-content operands (e.g. an
+    updated feature table) fall back to the float path."""
+    from repro.kernels import ref
+
+    g = random_csr(rng, 32, 5.0)
+    x1 = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    x2 = x1 + 1.0  # same shape, different content
+    cache = PlanCache()
+    plan = _quick_tune(g, x1, cache, quant=(8,))
+    assert plan.quantized is not None and plan.features_fp
+
+    want_x2 = ref.ell_spmm_rowloop(plan.ell.val, plan.ell.col, x2)
+    np.testing.assert_allclose(np.asarray(plan.run(x2)),
+                               np.asarray(want_x2), rtol=1e-5, atol=1e-5)
+    # and the original features still take the quantized path (lossy != x1)
+    got_x1 = plan.run(x1)
+    want_q = ref.ell_spmm_rowloop(
+        plan.ell.val, plan.ell.col,
+        np.asarray(plan.quantized.q, np.float32) * float(plan.quantized.scale)
+        + float(plan.quantized.x_min))
+    np.testing.assert_allclose(np.asarray(got_x1), np.asarray(want_q),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_refine_ranks_by_measured_score_not_raw_latency(monkeypatch):
+    """The measured winner is latency x accuracy penalty: a slightly slower
+    but far more accurate candidate must beat a fast low-coverage one."""
+    import repro.tuning.measure as measure_mod
+    from repro.tuning.cost_model import CostEstimate
+    from repro.tuning.measure import Measurement, refine
+
+    fast_biased = CandidateConfig("sfs", 16)
+    slow_accurate = CandidateConfig("aes", 128)
+    canned_us = {fast_biased: 100.0, slow_accurate: 150.0}
+
+    def fake_measure(csr, features, cfg, *, warmup, iters):
+        return Measurement(config=cfg, spmm_us=canned_us[cfg], sample_us=0.0)
+
+    monkeypatch.setattr(measure_mod, "measure_config", fake_measure)
+    ests = [
+        CostEstimate(fast_biased, 0, 0, accuracy_proxy=0.6, score=0),
+        CostEstimate(slow_accurate, 0, 0, accuracy_proxy=0.99, score=0),
+    ]
+    ranked = refine(None, None, ests, top_k=2)
+    assert ranked[0].config == slow_accurate
+    # raw-latency ranking would have picked the biased config instead
+    assert min(canned_us, key=canned_us.get) == fast_biased
+
+
+def test_different_graphs_get_different_plans(rng):
+    cache = PlanCache()
+    g1 = random_csr(rng, 32, 4.0)
+    g2 = random_csr(rng, 32, 4.0)
+    x = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    _quick_tune(g1, x, cache)
+    _quick_tune(g2, x, cache)
+    assert len(cache) == 2 and cache.stats.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# strategy="auto" end to end
+# ---------------------------------------------------------------------------
+
+def test_auto_matches_explicit_config(rng):
+    """auto's output == the explicitly-configured aes_spmm for the config
+    the tuner chose."""
+    g = random_csr(rng, 64, 7.0, skew=0.8)
+    x = jnp.asarray(rng.normal(size=(64, 24)).astype(np.float32))
+    cache = PlanCache()
+    got = aes_spmm(g, x, strategy="auto", plan_cache=cache,
+                   tune_kwargs=dict(warmup=0, iters=1))
+    cfg = cache.plans()[0].config
+    if cfg.strategy == "full":
+        want = aes_spmm(g, x, strategy="full", backend=cfg.backend)
+    else:
+        want = aes_spmm(g, x, cfg.sh_width, strategy=cfg.strategy,
+                        backend=cfg.backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_auto_picks_measured_best_of_grid(rng):
+    """With budget >= |grid| the chosen config is the measured-fastest, so
+    its latency is within 10% of the best in the grid by construction."""
+    g = random_csr(rng, 80, 6.0, skew=0.8)
+    x = jnp.asarray(rng.normal(size=(80, 16)).astype(np.float32))
+    grid = default_grid(widths=(16, 64))
+    cache = PlanCache()
+    plan = tune(g, x, grid=grid, budget=len(grid), cache=cache,
+                warmup=0, iters=1)
+    assert plan.config in grid
+    assert plan.measured_spmm_us > 0
+
+
+def test_prepare_run_operand_matches_aes_spmm(rng):
+    """measure.py's split (prepare once / run many) equals the one-shot
+    call for every strategy."""
+    g = random_csr(rng, 40, 6.0, skew=0.9)
+    x = jnp.asarray(rng.normal(size=(40, 12)).astype(np.float32))
+    for strat, w in (("aes", 32), ("afs", 16), ("sfs", 16), ("full", 0)):
+        cfg = CandidateConfig(strat, w)
+        ell, q = prepare_operand(g, cfg, x)
+        got = run_operand(ell, x, cfg, q)
+        if strat == "full":
+            want = aes_spmm(g, x, strategy="full")
+        else:
+            want = aes_spmm(g, x, w, strategy=strat)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_evaluate_auto_runs_and_caches(rng):
+    """gnn.evaluate(strategy='auto'): both GCN layers share one plan."""
+    from repro.gnn import evaluate, make_dataset, train_model
+
+    ds = make_dataset("cora", scale=0.08, seed=3)
+    params, ideal = train_model(ds, "gcn", epochs=20, seed=3)
+    cache = PlanCache()
+    acc = evaluate(ds, "gcn", params, strategy="auto", plan_cache=cache)
+    assert 0.0 <= acc <= 1.0
+    assert len(cache) == 1                      # one graph, one plan
+    assert cache.stats.hits >= 1                # layer 2 reused the plan
