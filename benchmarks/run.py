@@ -7,9 +7,9 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (accuracy_vs_w, autotune_gain, kernel_blocks,
-                            kernel_speedup, motivation, quant_loading,
-                            sampling_cdf)
+    from benchmarks import (accuracy_vs_w, autotune_gain, block_tuning_gain,
+                            kernel_blocks, kernel_speedup, motivation,
+                            quant_loading, sampling_cdf)
 
     print("name,us_per_call,derived")
     sampling_cdf.run()
@@ -19,6 +19,7 @@ def main() -> None:
     motivation.run()
     kernel_blocks.run()
     autotune_gain.run()
+    block_tuning_gain.run()
     try:
         from benchmarks import roofline
         roofline.report()

@@ -1,12 +1,14 @@
 """AES-SpMM core: adaptive edge sampling, quantization, graph containers."""
 from repro.core.aes_spmm import aes_spmm, sample
-from repro.core.graph import CSR, ELL, csr_from_edges, gcn_normalize, mean_normalize
+from repro.core.graph import (BlockELL, CSR, ELL, csr_from_edges,
+                              ell_live_widths, gcn_normalize, mean_normalize)
 from repro.core.quantization import QuantizedFeatures, dequantize, quantize
 from repro.core.sampling import (
     PRIME_NUM,
     SampleStrategy,
     get_sample_strategy,
     hash_start_ind,
+    sample_csr_to_block_ell,
     sample_csr_to_ell,
     sample_csr_to_ell_afs,
     sample_csr_to_ell_sfs,
@@ -14,9 +16,10 @@ from repro.core.sampling import (
 )
 
 __all__ = [
-    "aes_spmm", "sample", "CSR", "ELL", "csr_from_edges", "gcn_normalize",
-    "mean_normalize", "QuantizedFeatures", "dequantize", "quantize",
-    "PRIME_NUM", "SampleStrategy", "get_sample_strategy", "hash_start_ind",
-    "sample_csr_to_ell", "sample_csr_to_ell_afs", "sample_csr_to_ell_sfs",
-    "sampling_rate",
+    "aes_spmm", "sample", "BlockELL", "CSR", "ELL", "csr_from_edges",
+    "ell_live_widths",
+    "gcn_normalize", "mean_normalize", "QuantizedFeatures", "dequantize",
+    "quantize", "PRIME_NUM", "SampleStrategy", "get_sample_strategy",
+    "hash_start_ind", "sample_csr_to_block_ell", "sample_csr_to_ell",
+    "sample_csr_to_ell_afs", "sample_csr_to_ell_sfs", "sampling_rate",
 ]

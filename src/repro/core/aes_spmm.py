@@ -15,6 +15,12 @@ microbenchmarks, and the sampled ELL operand is cached under the graph's
 fingerprint — repeated calls with the same graph skip sampling entirely.
 ``sh_width``/``backend``/``quantized`` are then ignored (the plan carries
 its own); pass ``plan_cache`` to control cache scope (default: process-wide).
+
+``granularity="block"`` (auto only) tunes (strategy, W) *per fixed-size row
+block* instead of once per graph and serves from a stitched mixed-width
+BlockELL operand — the right tool for bimodal/power-law degree
+distributions, where one global width over-samples the dense head or wastes
+width on the sparse tail.
 """
 from __future__ import annotations
 
@@ -44,16 +50,47 @@ def sample(csr: CSR, sh_width: int, strategy: str = "aes",
 
 def aes_spmm(csr: CSR, features, sh_width: int = 128, *,
              strategy: str = "aes", backend: str = "jax",
+             granularity: str = "graph",
              quantized: Optional[QuantizedFeatures] = None,
              interpret=None, plan_cache=None, tune_kwargs=None):
-    """Sampled aggregation C = sample(A) @ B (paper Alg. 1 end to end)."""
+    """Sampled aggregation C = sample(A) @ B (paper Alg. 1 end to end).
+
+    Args:
+      csr: adjacency in CSR form (see ``repro.core.graph.CSR``).
+      features: dense operand B, f32[num_nodes, feat].
+      sh_width: shared-memory width W (ignored for strategy "full"/"auto").
+      strategy: "aes" | "afs" | "sfs" | "full" | "auto".
+      backend: "ref" | "jax" | "pallas" | "pallas_fused" (ignored for
+        "auto" — the tuned plan carries its own backend).
+      granularity: "graph" (default) tunes one global config; "block"
+        (auto only) tunes per row block and serves a mixed-width BlockELL.
+      quantized: optional pre-quantized B (int8/int16 gather path).
+      plan_cache / tune_kwargs: auto-mode cache scope and ``tune()`` /
+        ``tune_blocked()`` overrides.
+
+    Returns f32[num_rows, feat].
+    """
     from repro.kernels import ops, ref
 
+    if granularity not in ("graph", "block"):
+        raise ValueError(f"unknown granularity {granularity!r} "
+                         "(expected 'graph' or 'block')")
     if strategy == "auto":
-        from repro.tuning.autotune import tune
+        if granularity == "block":
+            from repro.tuning.autotune import tune_blocked
 
-        plan = tune(csr, features, cache=plan_cache, **(tune_kwargs or {}))
+            plan = tune_blocked(csr, features, cache=plan_cache,
+                                **(tune_kwargs or {}))
+        else:
+            from repro.tuning.autotune import tune
+
+            plan = tune(csr, features, cache=plan_cache,
+                        **(tune_kwargs or {}))
         return plan.run(features)
+    if granularity != "graph":
+        raise ValueError(
+            'granularity="block" requires strategy="auto" (per-block '
+            "configs are the tuner's to pick)")
 
     if quantized is not None and backend != "pallas":
         features = dequantize(quantized)

@@ -1,9 +1,13 @@
-"""Graph containers: CSR (paper §2.2, Fig. 1) and the ELL layout AES
-sampling produces, plus the GNN normalizations the models need.
+"""Graph containers: CSR (paper §2.2, Fig. 1), the fixed-width ELL layout
+AES sampling produces, the mixed-width BlockELL layout the per-row-block
+tuner stitches, plus the GNN normalizations the models need.
 
 CSR uses the standard three arrays (row_ptr, col_ind, val).  AES-SpMM adopts
 CSR directly ("eliminates overhead from additional format conversion"), and
 the sampler emits fixed-width ELL — the TPU-regular layout (DESIGN.md §2).
+``BlockELL`` generalizes ELL to one width per fixed-size row block so a
+bimodal degree distribution pays a narrow width on its sparse tail and a
+wide one only on its dense head (ROADMAP "per-row-block configs").
 """
 from __future__ import annotations
 
@@ -15,6 +19,17 @@ import numpy as np
 
 
 class CSR(NamedTuple):
+    """Compressed sparse row matrix.
+
+    Invariants:
+      * ``row_ptr`` is int32[num_rows + 1], non-decreasing, ``row_ptr[0] == 0``
+        and ``row_ptr[-1] == nnz``;
+      * ``col_ind`` is int32[nnz] with entries in ``[0, num_cols)``; entries
+        of one row are stored contiguously (sorted per row by construction
+        in :func:`csr_from_edges`, though no consumer requires sortedness);
+      * ``val`` is f32[nnz], aligned with ``col_ind``.
+    """
+
     row_ptr: jax.Array  # int32[rows + 1]
     col_ind: jax.Array  # int32[nnz]
     val: jax.Array      # f32[nnz]
@@ -29,12 +44,23 @@ class CSR(NamedTuple):
         return self.col_ind.shape[0]
 
     def row_nnz(self) -> jax.Array:
+        """Non-zeros per row: int32[num_rows]."""
         return (self.row_ptr[1:] - self.row_ptr[:-1]).astype(jnp.int32)
 
 
 class ELL(NamedTuple):
     """Fixed-width sampled layout: row r's live entries sit in
-    ``val[r, :], col[r, :]`` with dead slots zero-valued."""
+    ``val[r, :], col[r, :]`` with dead slots zero-valued.
+
+    Invariants:
+      * live slots form a contiguous prefix of each row (every sampler
+        fills slots ``s < live_w(r)`` and zeroes the rest);
+      * the padding sentinel is ``val == 0`` *and* ``col == 0`` — a dead
+        slot gathers row 0 of B but multiplies it by 0, so padding is an
+        exact no-op in the SpMM accumulation;
+      * ``width`` is the static shared-memory width W the sampler was run
+        with (``min(row_nnz, W)`` slots are live per row).
+    """
 
     val: jax.Array  # f32[rows, W]
     col: jax.Array  # int32[rows, W]
@@ -47,6 +73,99 @@ class ELL(NamedTuple):
     @property
     def width(self) -> int:
         return self.val.shape[1]
+
+
+class BlockELL(NamedTuple):
+    """Mixed-width ELL: one (strategy, width) per fixed-size row block.
+
+    The rows are partitioned into ``num_blocks = ceil(num_rows /
+    block_rows)`` blocks of ``block_rows`` rows each (the last block is
+    padded with empty rows up to ``block_rows`` so every block is uniform).
+    Block ``b`` is an ordinary ELL segment of shape
+    ``[block_rows, widths[b]]`` stored *flattened* row-major inside the
+    shared 1-D ``val``/``col`` arrays; its slots start at
+    ``slot_offsets()[b] = block_rows * sum(widths[:b])``.
+
+    Invariants:
+      * ``widths`` / ``strategies`` are static Python tuples of length
+        ``num_blocks`` — widths are >= 1; strategies name entries of
+        ``repro.core.sampling.STRATEGIES`` or ``"full"``;
+      * the padding sentinel matches :class:`ELL`: dead slots carry
+        ``val == 0`` and ``col == 0`` and live slots form a contiguous
+        prefix of each row, of length ``live_w[row]``;
+      * ``live_w`` is int32[num_blocks * block_rows] (padded rows included,
+        with ``live_w == 0``); ``num_rows`` is the *logical* row count;
+      * ``val``/``col`` may carry >= ``max_width`` zeroed elements past
+        ``total_slots`` (the stitcher appends them) so the block kernel's
+        fixed-size row DMA can over-read safely without a per-call pad.
+    """
+
+    val: jax.Array              # f32[total_slots]  flattened block segments
+    col: jax.Array              # int32[total_slots]
+    live_w: jax.Array           # int32[num_blocks * block_rows]
+    widths: tuple               # static int per block
+    strategies: tuple           # static strategy name per block
+    block_rows: int
+    num_rows: int
+    num_cols: int
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.widths)
+
+    @property
+    def padded_rows(self) -> int:
+        return self.num_blocks * self.block_rows
+
+    @property
+    def total_slots(self) -> int:
+        return self.block_rows * sum(self.widths)
+
+    @property
+    def max_width(self) -> int:
+        return max(self.widths) if self.widths else 1
+
+    def slot_offsets(self) -> tuple:
+        """Static slot offset of each block segment inside ``val``/``col``."""
+        offs, acc = [], 0
+        for w in self.widths:
+            offs.append(acc)
+            acc += self.block_rows * w
+        return tuple(offs)
+
+    def block_segment(self, b: int) -> tuple[jax.Array, jax.Array]:
+        """Block ``b`` as 2-D ELL arrays ``(val[block_rows, widths[b]],
+        col[block_rows, widths[b]])`` — a zero-copy reshape of the flat
+        storage (offsets and widths are static)."""
+        off = self.slot_offsets()[b]
+        w = self.widths[b]
+        n = self.block_rows * w
+        return (self.val[off:off + n].reshape(self.block_rows, w),
+                self.col[off:off + n].reshape(self.block_rows, w))
+
+    def live_edges(self) -> int:
+        """Total live slots over logical rows — the blocked analogue of the
+        cost model's ``sum_r min(row_nnz_r, W)`` (edge-coverage numerator)."""
+        return int(np.asarray(self.live_w)[:self.num_rows].sum())
+
+
+def ell_live_widths(val: jax.Array, col: jax.Array) -> jax.Array:
+    """Per-row live-prefix lengths of an ELL segment, decoded from the
+    padding sentinel (dead slot == ``val == 0 and col == 0``; live slots
+    are a contiguous prefix — the invariant shared by ELL and BlockELL).
+
+    Args:
+      val / col: one fixed-width segment, ``[rows, W]``.
+
+    Returns int32[rows]: ``1 +`` the last live slot index (0 for all-dead
+    rows).  The single source of truth for sentinel decoding — keep kernel
+    wrappers and stitchers on this helper so a future sentinel change has
+    one home.
+    """
+    width = val.shape[1]
+    mask = (val != 0) | (col != 0)
+    pos = jnp.arange(1, width + 1, dtype=jnp.int32)[None, :]
+    return jnp.max(jnp.where(mask, pos, 0), axis=1).astype(jnp.int32)
 
 
 def csr_from_edges(src: np.ndarray, dst: np.ndarray, num_nodes: int,
@@ -103,6 +222,8 @@ def mean_normalize(csr: CSR) -> CSR:
 
 
 def csr_to_dense(csr: CSR) -> jax.Array:
+    """Densify: f32[num_rows, num_cols] with duplicate edges accumulated —
+    the exact reference the sampled kernels are tested against."""
     rows = jnp.repeat(jnp.arange(csr.num_rows), csr.row_nnz(),
                       total_repeat_length=csr.nnz)
     dense = jnp.zeros((csr.num_rows, csr.num_cols), csr.val.dtype)
@@ -111,7 +232,15 @@ def csr_to_dense(csr: CSR) -> jax.Array:
 
 def pad_csr_to_ell(csr: CSR, width: int | None = None) -> ELL:
     """No-sampling ELL: every row padded to max row_nnz (GE-SpMM-role
-    baseline keeps all edges; only the layout changes)."""
+    baseline keeps all edges; only the layout changes).
+
+    Args:
+      csr: source matrix.
+      width: override the ELL width (default: the graph's max row nnz —
+        narrower values truncate rows, first-W).
+
+    Returns an exact ``ELL`` when ``width >= max(row_nnz)``.
+    """
     nnz = np.asarray(csr.row_nnz())
     w = int(nnz.max()) if width is None else width
     from .sampling import sample_csr_to_ell_sfs  # first-W == all when w >= max nnz

@@ -26,6 +26,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PRIME_NUM = 1429  # paper §3.3: "prime_num is set to 1429"
 
@@ -188,6 +189,79 @@ STRATEGIES = {
     "afs": sample_csr_to_ell_afs,
     "sfs": sample_csr_to_ell_sfs,
 }
+
+
+# ----------------------------------------------------------------------------
+# Blocked sampling: one (strategy, width) per fixed-size row block.
+# ----------------------------------------------------------------------------
+
+def sample_csr_to_block_ell(csr, configs, block_rows: int):
+    """Stitch a mixed-width :class:`~repro.core.graph.BlockELL` from a CSR.
+
+    Args:
+      csr: the source matrix.
+      configs: sequence of ``(strategy, width)`` pairs, one per row block
+        (``ceil(num_rows / block_rows)`` entries).  ``strategy`` is a key of
+        :data:`STRATEGIES` or ``"full"``; for ``"full"`` the width argument
+        is ignored and the block pads to its own max row nnz (exact, no
+        edge dropped).
+      block_rows: rows per block.  The last block is padded with empty rows.
+
+    Returns:
+      ``BlockELL`` whose block ``b`` equals running ``STRATEGIES[s]`` on the
+      sub-CSR of rows ``[b*block_rows, (b+1)*block_rows)`` with width
+      ``configs[b][1]`` — each sampler sees the *global* ``col_ind``/``val``
+      arrays through the sliced ``row_ptr``, so no per-block copy of the
+      edge arrays is made.
+    """
+    from repro.core.graph import BlockELL, ell_live_widths
+
+    num_rows = csr.num_rows
+    num_blocks = max(-(-num_rows // block_rows), 1)
+    if len(configs) != num_blocks:
+        raise ValueError(
+            f"expected {num_blocks} block configs for {num_rows} rows at "
+            f"block_rows={block_rows}, got {len(configs)}")
+
+    row_nnz_host = np.asarray(csr.row_ptr[1:]) - np.asarray(csr.row_ptr[:-1])
+    vals, cols, lives, widths, strategies = [], [], [], [], []
+    for b, (strat, width) in enumerate(configs):
+        r0 = b * block_rows
+        r1 = min(r0 + block_rows, num_rows)
+        sub_ptr = csr.row_ptr[r0:r1 + 1]
+        blk_nnz = row_nnz_host[r0:r1]
+        if strat == "full":
+            width = int(blk_nnz.max()) if len(blk_nnz) else 0
+            fn = sample_csr_to_ell_sfs       # first-W == all when W >= max nnz
+        else:
+            fn = STRATEGIES[strat]
+        width = max(int(width), 1)
+        if csr.nnz == 0 or r1 <= r0:
+            v = jnp.zeros((r1 - r0, width), csr.val.dtype)
+            c = jnp.zeros((r1 - r0, width), jnp.int32)
+        else:
+            v, c = fn(sub_ptr, csr.col_ind, csr.val, width)
+        pad = block_rows - (r1 - r0)
+        if pad:
+            v = jnp.pad(v, ((0, pad), (0, 0)))
+            c = jnp.pad(c, ((0, pad), (0, 0)))
+        lives.append(ell_live_widths(v, c))
+        vals.append(v.reshape(-1))
+        cols.append(c.reshape(-1))
+        widths.append(width)
+        strategies.append("full" if strat == "full" else strat)
+
+    # Trailing max-width zero pad: lets the block kernel's fixed-size row
+    # DMA read past the last segment without a per-request jnp.pad copy
+    # (serving hits run straight off this operand).
+    max_w = max(widths)
+    vals.append(jnp.zeros(max_w, csr.val.dtype))
+    cols.append(jnp.zeros(max_w, jnp.int32))
+    return BlockELL(
+        val=jnp.concatenate(vals), col=jnp.concatenate(cols),
+        live_w=jnp.concatenate(lives), widths=tuple(widths),
+        strategies=tuple(strategies), block_rows=block_rows,
+        num_rows=num_rows, num_cols=csr.num_cols)
 
 
 def sampling_rate(row_ptr, sh_width: int) -> float:

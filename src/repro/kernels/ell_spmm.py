@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: SpMM over the AES-sampled ELL layout.
+"""Pallas TPU kernels: SpMM over the AES-sampled ELL layout, plus the
+block-dispatched variant over the mixed-width BlockELL layout.
 
 This is the SpMM stage of Algorithm 1 (lines 16-19), re-thought for TPU
 (DESIGN.md §2):
@@ -121,3 +122,126 @@ def ell_spmm(ell_val, ell_col, live_w, b, *, block_r: int = 8,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(ell_val, ell_col, live_w.reshape(rows, 1).astype(jnp.int32), b)
+
+
+# ---------------------------------------------------------------------------
+# Block-dispatched SpMM over the mixed-width BlockELL layout.
+# ---------------------------------------------------------------------------
+
+def _block_ell_spmm_kernel(table_ref, live_ref, val_ref, col_ref, b_ref,
+                           out_ref, stage_v, stage_c, bsc, ssem, bsem,
+                           *, block_f: int, max_w: int, block_rows: int):
+    """grid = (num_blocks, feat_tiles) — one program per (row block x F tile).
+
+    table_ref: i32[1, 2]          VMEM  this block's (slot offset, width)
+    live_ref:  i32[block_rows, 1] VMEM  live slots per row
+    val_ref:   f32[slots + max_w] HBM   flattened mixed-width segments
+    col_ref:   i32[slots + max_w] HBM
+    b_ref:     [num_nodes, F]     HBM   dense features
+    out_ref:   f32[block_rows, block_f] VMEM
+    stage_v/stage_c: VMEM[max_w]  row-slot landing zones (one DMA per row,
+        maximal static size; the live_w bound masks the tail)
+    bsc:       VMEM[2, 1, block_f] double-buffered B-row landing zone
+
+    Each program reads its own width from the block table.  The economy of
+    a narrow tail block is in its accumulation loop (live_w-bounded) and
+    its HBM footprint (narrow flat segments); the row staging DMA itself is
+    always ``max_w`` wide — Pallas copy sizes are static, so truly narrow
+    DMAs need one specialized launch per width group (ROADMAP follow-up).
+    """
+    f_start = pl.program_id(1) * block_f
+    seg_off = table_ref[0, 0]
+    width = table_ref[0, 1]
+
+    def row_body(r, _):
+        live = live_ref[r, 0]
+        row_slot = seg_off + r * width
+
+        # val and col staging use separate buffers + semaphores: issue both
+        # DMAs before waiting so the two copies overlap.
+        cp_v = pltpu.make_async_copy(
+            val_ref.at[pl.ds(row_slot, max_w)], stage_v, ssem.at[0])
+        cp_c = pltpu.make_async_copy(
+            col_ref.at[pl.ds(row_slot, max_w)], stage_c, ssem.at[1])
+        cp_v.start()
+        cp_c.start()
+        cp_v.wait()
+        cp_c.wait()
+
+        def b_copy(c, slot):
+            return pltpu.make_async_copy(
+                b_ref.at[pl.ds(c, 1), pl.ds(f_start, block_f)],
+                bsc.at[slot], bsem.at[slot])
+
+        @pl.when(live > 0)
+        def _():
+            b_copy(pl.load(stage_c, (jnp.int32(0),)), 0).start()
+
+        def k_body(k, acc):
+            slot = jax.lax.rem(k, 2)
+
+            @pl.when(k + 1 < live)
+            def _():
+                b_copy(pl.load(stage_c, (k + 1,)), jax.lax.rem(k + 1, 2)).start()
+
+            b_copy(pl.load(stage_c, (k,)), slot).wait()
+            return acc + pl.load(stage_v, (k,)) * bsc[slot, 0, :]
+
+        acc = jax.lax.fori_loop(0, live, k_body,
+                                jnp.zeros((block_f,), jnp.float32))
+        pl.store(out_ref, (pl.ds(r, 1), slice(None)), acc[None, :])
+        return _
+
+    jax.lax.fori_loop(0, block_rows, row_body, None)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "block_f", "max_w", "interpret"))
+def block_ell_spmm(table, live_w, val_flat, col_flat, b, *, block_rows: int,
+                   max_w: int, block_f: int = 128, interpret: bool = True):
+    """C[r, :] = sum_k seg_val[r, k] * B[seg_col[r, k], :] over mixed-width
+    block segments.
+
+    Args:
+      table: i32[num_blocks, 2] — per-block (flat slot offset, ELL width).
+      live_w: i32[num_blocks * block_rows] live slots per row.
+      val_flat / col_flat: flattened segments, padded by >= ``max_w``
+        trailing elements so the fixed-size row DMA never over-reads
+        (``repro.kernels.ops.block_ell_spmm`` pads).
+      b: dense operand [num_nodes, feat]; feat % block_f == 0.
+      max_w: max(widths) — static row-DMA size.
+
+    Returns f32[num_blocks * block_rows, feat].
+    """
+    num_blocks = table.shape[0]
+    rows = num_blocks * block_rows
+    feat = b.shape[1]
+    assert feat % block_f == 0
+
+    grid = (num_blocks, feat // block_f)
+    kernel = functools.partial(_block_ell_spmm_kernel, block_f=block_f,
+                               max_w=max_w, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, feat), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((max_w,), jnp.float32),      # row val landing zone
+            pltpu.VMEM((max_w,), jnp.int32),        # row col landing zone
+            pltpu.VMEM((2, 1, block_f), b.dtype),   # B-row landing zone
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(table, live_w.reshape(rows, 1).astype(jnp.int32), val_flat, col_flat, b)

@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import CSR, ELL
+from repro.core.graph import CSR, ELL, BlockELL
 
 from . import ref
 from .aes_sample import aes_sample as _aes_sample_kernel
 from .dequant import dequantize as _dequant_kernel
+from .ell_spmm import block_ell_spmm as _block_ell_spmm_kernel
 from .ell_spmm import ell_spmm as _ell_spmm_kernel
 from .fused_spmm import fused_aes_spmm as _fused_kernel
 
@@ -37,17 +38,32 @@ def _pad_to(x, mult, axis, value=0):
 
 def ell_spmm(ell: ELL, b, live_w=None, *, block_r: int = 8,
              block_f: int = 128, quantized_meta=None, interpret=None):
-    """Pallas ELL SpMM with padding.  ``quantized_meta=(scale, x_min)``
-    enables the fused-dequant gather (B must then be uint8)."""
+    """Pallas ELL SpMM with padding.
+
+    Args:
+      ell: sampled operand; ``ell.val`` f32[rows, W], ``ell.col``
+        int32[rows, W] (dead slots zeroed, live slots a contiguous prefix).
+      b: dense operand [num_nodes, feat] — f32, or uint8 when
+        ``quantized_meta`` is given.
+      live_w: optional int32[rows] live-prefix lengths; derived from the
+        zero sentinel when omitted.
+      block_r / block_f: Pallas tile sizes (rows and feat are padded up to
+        multiples of these; the padding is sliced off the result).
+      quantized_meta: ``(scale, x_min)`` enables the fused-dequant gather
+        (beyond-paper int8 path; B must then be uint8).
+      interpret: force Pallas interpret mode (default: interpret unless
+        running on a real TPU).
+
+    Returns:
+      f32[rows, feat] with ``C[r] = sum_k ell.val[r, k] * B[ell.col[r, k]]``.
+    """
     interpret = _interpret_default() if interpret is None else interpret
     rows, width = ell.val.shape
     feat = b.shape[1]
     if live_w is None:
-        # Live slots form a contiguous prefix (the strided layout fills
-        # s < N*cnt); its length = 1 + last index with val or col nonzero.
-        mask = (ell.val != 0) | (ell.col != 0)
-        pos = jnp.arange(1, width + 1, dtype=jnp.int32)[None, :]
-        live_w = jnp.max(jnp.where(mask, pos, 0), axis=1).astype(jnp.int32)
+        from repro.core.graph import ell_live_widths
+
+        live_w = ell_live_widths(ell.val, ell.col)
     val = _pad_to(ell.val, block_r, 0)
     col = _pad_to(ell.col, block_r, 0)
     lw = _pad_to(live_w, block_r, 0)
@@ -61,9 +77,62 @@ def ell_spmm(ell: ELL, b, live_w=None, *, block_r: int = 8,
     return out[:rows, :feat]
 
 
+def block_ell_spmm(bell: BlockELL, b, *, block_f: int = 128, interpret=None):
+    """Block-dispatched Pallas SpMM over a mixed-width BlockELL operand.
+
+    One Pallas program per (row block x feature tile); each program reads
+    its own (offset, width) from the block table, so tail blocks tuned to a
+    narrow width do proportionally less DMA and accumulation work.
+
+    Args:
+      bell: the stitched mixed-width operand (see ``core.graph.BlockELL``).
+      b: dense operand [num_nodes, feat] (f32; quantized B is not supported
+        on the blocked path yet).
+      block_f: feature-tile size (feat is padded up to a multiple).
+      interpret: force Pallas interpret mode (default: interpret off-TPU).
+
+    Returns:
+      f32[bell.num_rows, feat] — padded trailing rows sliced off.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    feat = b.shape[1]
+    max_w = bell.max_width
+    table = jnp.asarray(
+        [[off, w] for off, w in zip(bell.slot_offsets(), bell.widths)],
+        jnp.int32)
+    # The fixed-size row DMA over-reads up to max_w past the last segment;
+    # the stitcher pre-pads the flat arrays for this (plans built by other
+    # means fall back to a per-call pad).
+    need = bell.total_slots + max_w
+    if bell.val.shape[0] >= need:
+        val_flat, col_flat = bell.val, bell.col
+    else:
+        short = need - bell.val.shape[0]
+        val_flat = jnp.pad(bell.val, (0, short))
+        col_flat = jnp.pad(bell.col, (0, short))
+    bp = _pad_to(b, block_f, 1)
+    out = _block_ell_spmm_kernel(table, bell.live_w, val_flat, col_flat, bp,
+                                 block_rows=bell.block_rows, max_w=max_w,
+                                 block_f=block_f, interpret=interpret)
+    return out[:bell.num_rows, :feat]
+
+
 def aes_sample(csr: CSR, sh_width: int, *, block_r: int = 8,
                interpret=None) -> ELL:
-    """Pallas sampling pre-pass; pads CSR arrays for the run-DMA over-read."""
+    """Pallas AES sampling pre-pass: CSR -> ELL(width=sh_width).
+
+    Args:
+      csr: source matrix; its ``col_ind``/``val`` are padded by ``sh_width``
+        trailing elements so the kernel's fixed-size run DMA never
+        over-reads.
+      sh_width: static ELL width (the paper's shared-memory W knob).
+      block_r: rows per Pallas program (row count padded to a multiple).
+      interpret: force Pallas interpret mode (default: interpret off-TPU).
+
+    Returns:
+      ``ELL`` with ``val`` f32[num_rows, sh_width], ``col``
+      int32[num_rows, sh_width], dead slots zeroed.
+    """
     interpret = _interpret_default() if interpret is None else interpret
     rows = csr.num_rows
     row_start = _pad_to(csr.row_ptr[:-1], block_r, 0)
@@ -78,7 +147,19 @@ def aes_sample(csr: CSR, sh_width: int, *, block_r: int = 8,
 
 def fused_aes_spmm(csr: CSR, b, sh_width: int, *, block_r: int = 8,
                    block_f: int = 128, interpret=None):
-    """Single-kernel AES-SpMM (paper Alg. 1): sample + multiply fused."""
+    """Single-kernel AES-SpMM (paper Alg. 1): sample + multiply fused.
+
+    Args:
+      csr: source matrix (arrays padded internally for the run DMA).
+      b: dense operand f32[num_nodes, feat].
+      sh_width: static shared-memory width W.
+      block_r / block_f: Pallas tile sizes (padded, then sliced off).
+      interpret: force Pallas interpret mode (default: interpret off-TPU).
+
+    Returns:
+      f32[num_rows, feat] — AES-sampled aggregation, no intermediate ELL
+      materialized in HBM.
+    """
     interpret = _interpret_default() if interpret is None else interpret
     rows = csr.num_rows
     feat = b.shape[1]
@@ -94,6 +175,17 @@ def fused_aes_spmm(csr: CSR, b, sh_width: int, *, block_r: int = 8,
 
 def dequantize(q, scale, x_min, *, bits: int = 8, block_n: int = 256,
                block_f: int = 128, interpret=None):
+    """Pallas dequantization (paper Eq. 2): ``q * scale + x_min``.
+
+    Args:
+      q: quantized matrix uint8/uint16[n, f].
+      scale / x_min: the affine dequant constants.
+      bits: source bit width (8 or 16).
+      block_n / block_f: Pallas tile sizes (padded, then sliced off).
+      interpret: force Pallas interpret mode (default: interpret off-TPU).
+
+    Returns f32[n, f].
+    """
     interpret = _interpret_default() if interpret is None else interpret
     n, f = q.shape
     qp = _pad_to(_pad_to(q, block_n, 0), block_f, 1)

@@ -43,6 +43,21 @@ def ell_spmm_rowloop(ell_val, ell_col, b):
     return acc
 
 
+def block_ell_spmm(bell, b):
+    """Oracle for the blocked SpMM kernel: run each fixed-width block
+    segment through :func:`ell_spmm_rowloop` and stitch the outputs.
+
+    Args:
+      bell: a ``repro.core.graph.BlockELL``.
+      b: dense operand f32[num_cols_of_graph, feat].
+
+    Returns f32[bell.num_rows, feat] (padded trailing rows dropped).
+    """
+    outs = [ell_spmm_rowloop(*bell.block_segment(i), b)
+            for i in range(bell.num_blocks)]
+    return jnp.concatenate(outs, axis=0)[:bell.num_rows]
+
+
 @functools.partial(jax.jit, static_argnames=("bits",))
 def dequantize(q, x_min, x_max, bits: int = 8):
     """Oracle for the dequant kernel (paper Eq. 2)."""

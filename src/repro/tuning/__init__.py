@@ -26,22 +26,35 @@ Walkthrough — what happens on ``aes_spmm(csr, x, strategy="auto")``:
 
 4. **plan_cache.py** — the winning config *plus its prepared operand* (the
    sampled ELL, the pre-quantized features) is stored as a ``TunedPlan``
-   under the graph fingerprint, in memory and optionally on disk
-   (``$REPRO_PLAN_CACHE_DIR``).  A hit serves straight from the operand.
+   under the graph fingerprint, in a bounded in-memory LRU
+   (``$REPRO_PLAN_CACHE_MAX``, default 64 plans) and optionally on disk
+   (``$REPRO_PLAN_CACHE_DIR``), schema-stamped with
+   ``PLAN_SCHEMA_VERSION``.  A hit serves straight from the operand.
 
 5. **autotune.py** — ``tune(csr, features, budget=...) -> TunedPlan``
    orchestrates 1-4; ``python -m repro.tuning.autotune`` is the CLI
    (``--smoke`` for CI).
 
-Entry points: ``tune``, ``TunedPlan``, ``PlanCache``, ``CandidateConfig``,
-``extract_features``, ``fingerprint``.
+Blocked variant (``aes_spmm(..., strategy="auto", granularity="block")``):
+``tune_blocked`` partitions the rows into fixed-size blocks (default 4096),
+extracts features *per block* (``extract_block_features``), lets the cost
+model rank (strategy, W) independently for each block, and stitches the
+winners into a mixed-width ``BlockELL`` operand served by a block-dispatched
+kernel — a ``BlockedPlan`` cached beside the global kind under the same
+fingerprint.
+
+Entry points: ``tune``, ``tune_blocked``, ``TunedPlan``, ``BlockedPlan``,
+``PlanCache``, ``PLAN_SCHEMA_VERSION``, ``CandidateConfig``,
+``extract_features``, ``extract_block_features``, ``fingerprint``.
 """
 from repro.tuning.cost_model import (CandidateConfig, CostEstimate,
                                      MachineModel, default_grid, predict,
                                      rank)
-from repro.tuning.features import (GraphFeatures, extract_features,
-                                   features_from_row_nnz, fingerprint)
-from repro.tuning.plan_cache import (PlanCache, TunedPlan, default_cache,
+from repro.tuning.features import (GraphFeatures, extract_block_features,
+                                   extract_features, features_from_row_nnz,
+                                   fingerprint)
+from repro.tuning.plan_cache import (PLAN_SCHEMA_VERSION, BlockedPlan,
+                                     PlanCache, TunedPlan, default_cache,
                                      reset_default_cache)
 
 
@@ -52,12 +65,17 @@ def __getattr__(name):
         from repro.tuning.autotune import tune
 
         return tune
+    if name == "tune_blocked":
+        from repro.tuning.autotune import tune_blocked
+
+        return tune_blocked
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
-    "CandidateConfig", "CostEstimate", "GraphFeatures", "MachineModel",
-    "PlanCache", "TunedPlan", "default_cache", "default_grid",
+    "BlockedPlan", "CandidateConfig", "CostEstimate", "GraphFeatures",
+    "MachineModel", "PLAN_SCHEMA_VERSION", "PlanCache", "TunedPlan",
+    "default_cache", "default_grid", "extract_block_features",
     "extract_features", "features_from_row_nnz", "fingerprint", "predict",
-    "rank", "reset_default_cache", "tune",
+    "rank", "reset_default_cache", "tune", "tune_blocked",
 ]

@@ -1,13 +1,18 @@
-"""The tuner driver: ``tune(csr, features) -> TunedPlan`` and its CLI.
+"""The tuner driver: ``tune(csr, features) -> TunedPlan`` (one global
+config), ``tune_blocked(csr, features) -> BlockedPlan`` (per-row-block
+configs stitched into a mixed-width BlockELL), and the CLI over both.
 
 Pipeline (one cache miss):
 
-  1. fingerprint + sparsity features (features.py, one O(nnz) host pass);
+  1. fingerprint + sparsity features (features.py, one O(nnz) host pass;
+     per block for ``tune_blocked``);
   2. analytic ranking of the candidate grid (cost_model.py);
   3. empirical refinement: measure the analytic top-``budget`` on the live
-     backend (measure.py) and take the measured-fastest;
-  4. prepare the plan operand — sample the ELL once, pre-quantize if the
-     winning config asks for it — and store it in the plan cache.
+     backend (measure.py) and take the measured-fastest (``tune`` only —
+     blocked tuning ranks each block analytically and measures the stitched
+     plan once);
+  4. prepare the plan operand — sample the ELL/BlockELL once, pre-quantize
+     if the winning config asks for it — and store it in the plan cache.
 
 Every subsequent call with the same graph is a cache hit: no sampling, no
 quantization, no measurement — just the SpMM over the cached operand.
@@ -15,6 +20,7 @@ quantization, no measurement — just the SpMM over the cached operand.
 CLI::
 
     python -m repro.tuning.autotune --dataset cora --scale 0.02
+    python -m repro.tuning.autotune --granularity block --block-rows 4096
     python -m repro.tuning.autotune --smoke     # tiny fixed-seed run for CI
 """
 from __future__ import annotations
@@ -30,7 +36,8 @@ from repro.core.graph import CSR
 from repro.tuning import cost_model, features as features_mod, measure
 from repro.tuning.cost_model import (CandidateConfig, DEFAULT_WIDTHS,
                                      MachineModel, default_grid)
-from repro.tuning.plan_cache import PlanCache, TunedPlan, default_cache
+from repro.tuning.plan_cache import (BlockedPlan, PlanCache, TunedPlan,
+                                     default_cache)
 
 
 def _default_backends() -> tuple[str, ...]:
@@ -102,11 +109,104 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
     return plan
 
 
+def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
+                 widths: Sequence[int] = DEFAULT_WIDTHS,
+                 strategies: Sequence[str] = ("aes", "afs", "sfs"),
+                 backend: str | None = None,
+                 include_full: bool = True,
+                 machine: MachineModel | None = None,
+                 accuracy_weight: float = 5.0,
+                 cache: PlanCache | None = None,
+                 measure_plan: bool = True,
+                 warmup: int = 1, iters: int = 3,
+                 verbose: bool = False) -> BlockedPlan:
+    """Pick (strategy, W) *per fixed-size row block* and cache the stitched
+    mixed-width plan.
+
+    Each block is ranked analytically over ``strategies x widths``
+    (+ ``full``) with its own sparsity features, so a bimodal degree
+    distribution gets a wide config on its dense head and a narrow one on
+    its sparse tail instead of one global compromise.  Per-block
+    microbenchmarks would cost ``num_blocks x budget`` timings, so unlike
+    :func:`tune` the empirical pass here times the stitched plan once
+    (``measure_plan``) for reporting, not selection.
+
+    Args:
+      csr / features: as in :func:`tune` (synthetic f32[rows, 64] stands in
+        when ``features`` is omitted).
+      block_rows: rows per block (the ROADMAP's 4k-row tiles by default).
+      widths: candidate ELL widths per block.
+      strategies: sampled strategies in each block's grid.
+      backend: execution backend for the whole plan ("jax" | "pallas";
+        default: pallas on TPU, jax elsewhere).  Blocked plans use one
+        backend — per-block backends would fragment dispatch.
+      include_full: also offer exact padding (width = block max nnz) per
+        block — on sparse tail blocks this is usually the winner.
+      cache: plan cache (default process-wide); blocked plans are stored
+        under the same CSR fingerprint as global ones, kind="block".
+
+    Like :func:`tune`, the cache is keyed by graph content only: a warm
+    cache returns the stored plan *as tuned*, and every tuning knob above
+    (``block_rows``, ``widths``, ``backend``, ...) is ignored on a hit.
+    To re-tune with different knobs, evict first (``cache.clear()`` or a
+    fresh ``PlanCache``).
+
+    Returns the cached or freshly built :class:`BlockedPlan`.
+    """
+    from repro.core.sampling import sample_csr_to_block_ell
+
+    cache = cache if cache is not None else default_cache()
+    fp = features_mod.fingerprint(csr)
+    plan = cache.get(fp, kind="block")
+    if plan is not None:
+        return plan
+
+    if backend is None:
+        backend = _default_backends()[-1] if jax.default_backend() == "tpu" \
+            else "jax"
+    if features is None:
+        rng = np.random.default_rng(0)
+        features = np.asarray(
+            rng.normal(size=(csr.num_rows, 64)), np.float32)
+    feat_dim = int(features.shape[1])
+
+    block_feats = features_mod.extract_block_features(
+        csr, block_rows, feat_dim=feat_dim)
+    configs, predicted_us = [], 0.0
+    for b, bf in enumerate(block_feats):
+        candidates = [CandidateConfig(s, w, backend)
+                      for s in strategies for w in widths]
+        if include_full:
+            candidates.append(CandidateConfig("full", 0, backend))
+        best = cost_model.rank(bf, candidates, machine, accuracy_weight)[0]
+        configs.append((best.config.strategy, best.config.sh_width))
+        predicted_us += best.latency_us
+        if verbose:
+            print(f"  block {b:4d} rows={bf.num_rows} nnz={bf.nnz} "
+                  f"max={bf.max_row_nnz} -> {best.config.key()}")
+    # Each per-block estimate carries the per-kernel launch overhead, but
+    # the stitched plan dispatches all blocks from one launch — keep the
+    # overhead once, not num_blocks times.
+    m = machine or MachineModel()
+    predicted_us -= (len(block_feats) - 1) * m.launch_overhead_us
+
+    bell = sample_csr_to_block_ell(csr, configs, block_rows)
+    plan = BlockedPlan(bell=bell, backend=backend, fingerprint=fp,
+                       predicted_us=predicted_us)
+    if measure_plan:
+        plan.measured_spmm_us = measure.time_us(
+            plan.run, features, warmup=warmup, iters=iters)
+    cache.put(plan)
+    return plan
+
+
 # ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 
 def _run_cli(args: argparse.Namespace) -> dict:
+    import time
+
     from repro.gnn.datasets import SYNTHETIC_DATASETS, make_dataset
 
     if not args.smoke and args.dataset not in SYNTHETIC_DATASETS:
@@ -125,12 +225,40 @@ def _run_cli(args: argparse.Namespace) -> dict:
     csr = ds.gcn_adj
     cache = PlanCache(args.cache_dir) if args.cache_dir else PlanCache()
 
+    if args.granularity == "block":
+        if args.quant:
+            raise SystemExit(
+                "--quant is not supported with --granularity block "
+                "(quantized features are a global-plan feature for now)")
+        plan = tune_blocked(csr, ds.features, block_rows=args.block_rows,
+                            widths=widths, cache=cache, verbose=args.verbose)
+        t0 = time.perf_counter()
+        tune_blocked(csr, ds.features, block_rows=args.block_rows,
+                     cache=cache)
+        hit_us = (time.perf_counter() - t0) * 1e6
+        from collections import Counter
+        report = {
+            "dataset": ds_name,
+            "nodes": csr.num_rows,
+            "edges": csr.nnz,
+            "granularity": "block",
+            "block_rows": plan.block_rows,
+            "num_blocks": plan.bell.num_blocks,
+            "block_configs": dict(Counter(
+                f"{s}-w{w}" for s, w in plan.block_configs())),
+            "live_edges": plan.bell.live_edges(),
+            "measured_spmm_us": round(plan.measured_spmm_us, 2),
+            "predicted_us": round(plan.predicted_us, 2),
+            "cache_hit_us": round(hit_us, 2),
+        }
+        print(json.dumps(report, indent=None if args.json else 2))
+        return report
+
     plan = tune(csr, ds.features, budget=budget, widths=widths,
                 quant=(None, 8) if args.quant else (None,),
                 cache=cache, verbose=args.verbose)
 
     # a second tune() with the same graph must be a pure cache hit
-    import time
     hits_before = cache.stats.hits
     t0 = time.perf_counter()
     tune(csr, ds.features, cache=cache)
@@ -169,7 +297,14 @@ def main(argv: Sequence[str] | None = None) -> None:
     p.add_argument("--widths", type=int, nargs="+",
                    default=list(DEFAULT_WIDTHS))
     p.add_argument("--budget", type=int, default=6,
-                   help="how many analytic top candidates to measure")
+                   help="how many analytic top candidates to measure "
+                        "(graph granularity only; blocked tuning ranks "
+                        "analytically per block)")
+    p.add_argument("--granularity", choices=("graph", "block"),
+                   default="graph",
+                   help="one global config, or per-row-block mixed widths")
+    p.add_argument("--block-rows", type=int, default=4096,
+                   help="rows per block for --granularity block")
     p.add_argument("--quant", action="store_true",
                    help="include int8 feature quantization in the grid")
     p.add_argument("--cache-dir", default=None,

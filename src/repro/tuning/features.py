@@ -82,11 +82,11 @@ class GraphFeatures:
         return min(self.sum_min_nnz(width) / self.nnz, 1.0)
 
 
-def extract_features(csr: CSR, feat_dim: int = 64,
-                     with_fingerprint: bool = True) -> GraphFeatures:
-    """One host pass over the CSR: histogram + skew + (optional) fingerprint."""
-    row_ptr = np.asarray(csr.row_ptr)
-    row_nnz = (row_ptr[1:] - row_ptr[:-1]).astype(np.int64)
+def _stats_from_row_nnz(row_nnz: np.ndarray, num_cols: int, feat_dim: int,
+                        fp: str = "") -> GraphFeatures:
+    """Histogram + skew summaries for one degree sequence (shared by the
+    whole-graph and per-block extractors)."""
+    row_nnz = np.asarray(row_nnz, np.int64)
     nnz = int(row_nnz.sum())
     num_rows = len(row_nnz)
 
@@ -107,7 +107,7 @@ def extract_features(csr: CSR, feat_dim: int = 64,
 
     return GraphFeatures(
         num_rows=num_rows,
-        num_cols=csr.num_cols,
+        num_cols=num_cols,
         nnz=nnz,
         feat_dim=feat_dim,
         empty_rows=int((row_nnz == 0).sum()),
@@ -116,8 +116,55 @@ def extract_features(csr: CSR, feat_dim: int = 64,
         row_cv=cv,
         tail_edge_frac=tail_frac,
         hist=tuple(int(c) for c in hist),
-        fingerprint=fingerprint(csr) if with_fingerprint else "",
+        fingerprint=fp,
     )
+
+
+def extract_features(csr: CSR, feat_dim: int = 64,
+                     with_fingerprint: bool = True) -> GraphFeatures:
+    """One host pass over the CSR: histogram + skew + (optional) fingerprint.
+
+    Args:
+      csr: the graph to summarize.
+      feat_dim: width of the dense operand the SpMM will multiply (the cost
+        model's FLOP/byte counts scale linearly in it).
+      with_fingerprint: also hash the arrays (skippable when the caller
+        already has the plan-cache key).
+
+    Returns a :class:`GraphFeatures`.
+    """
+    row_ptr = np.asarray(csr.row_ptr)
+    row_nnz = (row_ptr[1:] - row_ptr[:-1]).astype(np.int64)
+    return _stats_from_row_nnz(
+        row_nnz, csr.num_cols, feat_dim,
+        fp=fingerprint(csr) if with_fingerprint else "")
+
+
+def extract_block_features(csr: CSR, block_rows: int,
+                           feat_dim: int = 64) -> list[GraphFeatures]:
+    """Blocked variant of :func:`extract_features`: one ``GraphFeatures``
+    per fixed-size row block, still one O(nnz) host pass overall.
+
+    Args:
+      csr: the graph to summarize.
+      block_rows: rows per block; the last block may be short (its
+        statistics cover only the real rows).
+      feat_dim: dense-operand width, as in :func:`extract_features`.
+
+    Returns ``ceil(num_rows / block_rows)`` feature records (at least one,
+    empty-graph safe).  Fingerprints are left blank — blocked plans are
+    keyed by the whole-graph fingerprint, not per block.
+    """
+    row_ptr = np.asarray(csr.row_ptr)
+    row_nnz = (row_ptr[1:] - row_ptr[:-1]).astype(np.int64)
+    num_rows = len(row_nnz)
+    num_blocks = max(-(-num_rows // block_rows), 1)
+    return [
+        _stats_from_row_nnz(
+            row_nnz[b * block_rows:(b + 1) * block_rows],
+            csr.num_cols, feat_dim)
+        for b in range(num_blocks)
+    ]
 
 
 def features_from_row_nnz(row_nnz: Sequence[int], num_cols: int,

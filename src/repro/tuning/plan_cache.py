@@ -6,13 +6,29 @@ never re-samples or re-quantizes: the chosen ``CandidateConfig``, the sampled
 matrix.  ES-SpMM's cache-first design is the motivation — tune once per
 graph, then serve every request from the cached plan.
 
+Two kinds of plan share the cache:
+
+  * ``TunedPlan`` — one global (strategy, W, backend, quant) for the whole
+    graph, with its sampled ``ELL`` operand;
+  * ``BlockedPlan`` — per-row-block (strategy, W) stitched into a
+    mixed-width ``BlockELL`` operand (``granularity="block"``).  The
+    fingerprint semantics are unchanged (content hash of the CSR); the two
+    kinds are stored side by side under ``(fingerprint, kind)``.
+
 Two tiers:
 
-  * in-memory dict — always on; hit == dict lookup;
+  * in-memory LRU — always on; hit == dict lookup; bounded to
+    ``$REPRO_PLAN_CACHE_MAX`` plans (default 64), least-recently-used
+    evicted first;
   * on-disk directory (``cache_dir`` or ``$REPRO_PLAN_CACHE_DIR``) — one
-    ``<fingerprint>.npz`` per plan (arrays + JSON-encoded config), surviving
-    process restarts.  Disk is only consulted on a memory miss and re-warms
-    the memory tier.
+    ``<fingerprint>.npz`` (global) / ``<fingerprint>.block.npz`` (blocked)
+    per plan (arrays + JSON-encoded config), surviving process restarts.
+    Disk is only consulted on a memory miss and re-warms the memory tier.
+
+Every on-disk entry is stamped with ``PLAN_SCHEMA_VERSION``; entries from a
+different schema (including pre-versioning ones with no stamp at all) are
+*rejected on load* and treated as a miss — the tuner rewrites them — rather
+than risk mis-reading old layouts.
 
 The module-level ``default_cache()`` (memory-only unless the env var is set)
 backs ``aes_spmm(..., strategy="auto")``.
@@ -22,18 +38,27 @@ from __future__ import annotations
 import json
 import os
 import zipfile
+from collections import OrderedDict
 from dataclasses import dataclass
 from pathlib import Path
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import ELL
+from repro.core.graph import ELL, BlockELL
 from repro.core.quantization import QuantizedFeatures
 from repro.tuning.cost_model import CandidateConfig
 
 _ENV_DIR = "REPRO_PLAN_CACHE_DIR"
+_ENV_MAX = "REPRO_PLAN_CACHE_MAX"
+
+#: On-disk entry layout version.  Bump on any change to the npz arrays or
+#: meta keys; loaders reject entries whose stamp differs (treated as a
+#: miss, so the tuner rewrites them with the current layout).
+PLAN_SCHEMA_VERSION = 2
+
+_DEFAULT_MAX_PLANS = 64
 
 
 def features_fingerprint(features) -> str:
@@ -62,6 +87,8 @@ class TunedPlan:
     measured_spmm_us: float = 0.0
     measured_sample_us: float = 0.0
 
+    kind = "global"
+
     def run(self, features):
         """Steady-state aggregation: SpMM over the cached operand.
 
@@ -80,6 +107,47 @@ class TunedPlan:
 
 
 @dataclass
+class BlockedPlan:
+    """Per-row-block tuned plan: mixed-width BlockELL operand + dispatch.
+
+    The block table (per-block widths, strategies, slot offsets) lives
+    inside ``bell``; ``block_configs()`` re-exposes it as (strategy, W)
+    pairs for reporting.  Quantized features are not supported on the
+    blocked path yet (the blocked kernels gather f32 B-rows only).
+    """
+
+    bell: BlockELL
+    backend: str                    # "jax" (rowloop) | "pallas" (block kernel)
+    fingerprint: str
+    predicted_us: float = 0.0       # sum of per-block analytic latencies
+    measured_spmm_us: float = 0.0
+
+    kind = "block"
+
+    @property
+    def block_rows(self) -> int:
+        return self.bell.block_rows
+
+    def block_configs(self) -> list[tuple[str, int]]:
+        """Per-block (strategy, width) — the stitched tuning decisions."""
+        return list(zip(self.bell.strategies, self.bell.widths))
+
+    def run(self, features):
+        """Steady-state aggregation: block-dispatched SpMM over the cached
+        mixed-width operand."""
+        if self.backend == "pallas":
+            from repro.kernels import ops
+
+            return ops.block_ell_spmm(self.bell, features)
+        from repro.kernels import ref
+
+        return ref.block_ell_spmm(self.bell, features)
+
+
+AnyPlan = Union[TunedPlan, BlockedPlan]
+
+
+@dataclass
 class CacheStats:
     hits: int = 0
     misses: int = 0
@@ -91,47 +159,77 @@ class CacheStats:
 
 
 class PlanCache:
-    """In-memory + optional on-disk fingerprint -> TunedPlan store."""
+    """Bounded in-memory LRU + optional on-disk (fingerprint, kind) ->
+    plan store.
 
-    def __init__(self, cache_dir: str | os.PathLike | None = None):
+    ``max_plans`` bounds the memory tier only (the prepared operands are
+    the big payload); disk entries are never evicted here.  Default comes
+    from ``$REPRO_PLAN_CACHE_MAX`` (fallback 64).
+    """
+
+    def __init__(self, cache_dir: str | os.PathLike | None = None,
+                 max_plans: int | None = None):
         if cache_dir is None:
             cache_dir = os.environ.get(_ENV_DIR) or None
         self.cache_dir = Path(cache_dir) if cache_dir else None
-        self._mem: dict[str, TunedPlan] = {}
+        if max_plans is None:
+            max_plans = int(os.environ.get(_ENV_MAX) or _DEFAULT_MAX_PLANS)
+        self.max_plans = max(int(max_plans), 1)
+        self._mem: OrderedDict[str, AnyPlan] = OrderedDict()
         self.stats = CacheStats()
+
+    @staticmethod
+    def _key(fingerprint: str, kind: str) -> str:
+        return f"{fingerprint}|{kind}"
+
+    def _insert(self, key: str, plan: AnyPlan) -> None:
+        self._mem[key] = plan
+        self._mem.move_to_end(key)
+        while len(self._mem) > self.max_plans:
+            self._mem.popitem(last=False)   # least recently used
 
     # -- lookup ----------------------------------------------------------
 
-    def get(self, fingerprint: str) -> Optional[TunedPlan]:
-        plan = self._mem.get(fingerprint)
+    def get(self, fingerprint: str, kind: str = "global") -> Optional[AnyPlan]:
+        """Fetch the ``kind`` ("global" | "block") plan for a fingerprint;
+        None on a miss.  Hits refresh LRU recency."""
+        key = self._key(fingerprint, kind)
+        plan = self._mem.get(key)
         if plan is not None:
+            self._mem.move_to_end(key)
             self.stats.hits += 1
             return plan
         if self.cache_dir is not None:
-            plan = self._load_disk(fingerprint)
+            plan = self._load_disk(fingerprint, kind)
             if plan is not None:
-                self._mem[fingerprint] = plan
+                self._insert(key, plan)
                 self.stats.hits += 1
                 self.stats.disk_hits += 1
                 return plan
         self.stats.misses += 1
         return None
 
-    def put(self, plan: TunedPlan) -> None:
-        self._mem[plan.fingerprint] = plan
+    def put(self, plan: AnyPlan) -> None:
+        self._insert(self._key(plan.fingerprint, plan.kind), plan)
         if self.cache_dir is not None:
             self._save_disk(plan)
 
     def __contains__(self, fingerprint: str) -> bool:
-        return fingerprint in self._mem or (
-            self.cache_dir is not None
-            and self._path(fingerprint).exists())
+        """True iff ``get()`` would hit for *some* kind — memory, or a
+        schema-valid disk entry (a stale-schema file is not membership)."""
+        kinds = ("global", "block")
+        if any(self._key(fingerprint, k) in self._mem for k in kinds):
+            return True
+        if self.cache_dir is None:
+            return False
+        return any(self._load_disk(fingerprint, k) is not None
+                   for k in kinds)
 
     def __len__(self) -> int:
         return len(self._mem)
 
-    def plans(self) -> list[TunedPlan]:
-        """In-memory plans (insertion order)."""
+    def plans(self) -> list[AnyPlan]:
+        """In-memory plans (least- to most-recently used)."""
         return list(self._mem.values())
 
     def clear(self, disk: bool = False) -> None:
@@ -143,44 +241,97 @@ class PlanCache:
 
     # -- disk tier -------------------------------------------------------
 
-    def _path(self, fingerprint: str) -> Path:
-        return self.cache_dir / f"{fingerprint}.npz"
+    def _path(self, fingerprint: str, kind: str = "global") -> Path:
+        suffix = ".npz" if kind == "global" else ".block.npz"
+        return self.cache_dir / f"{fingerprint}{suffix}"
 
-    def _save_disk(self, plan: TunedPlan) -> None:
+    def _save_disk(self, plan: AnyPlan) -> None:
         self.cache_dir.mkdir(parents=True, exist_ok=True)
-        meta = {
-            "config": plan.config.to_dict(),
-            "fingerprint": plan.fingerprint,
-            "features_fp": plan.features_fp,
-            "num_cols": plan.ell.num_cols,
-            "predicted_us": plan.predicted_us,
-            "measured_spmm_us": plan.measured_spmm_us,
-            "measured_sample_us": plan.measured_sample_us,
-            "quant_bits": None if plan.quantized is None
-            else plan.quantized.bits,
-        }
-        arrays = {
-            "ell_val": np.asarray(plan.ell.val),
-            "ell_col": np.asarray(plan.ell.col),
-            "meta": np.frombuffer(
-                json.dumps(meta).encode(), dtype=np.uint8),
-        }
-        if plan.quantized is not None:
-            arrays["q"] = np.asarray(plan.quantized.q)
-            arrays["q_minmax"] = np.asarray(
-                [float(plan.quantized.x_min), float(plan.quantized.x_max)],
-                np.float32)
-        tmp = self._path(plan.fingerprint).with_suffix(".tmp.npz")
+        if plan.kind == "block":
+            meta = {
+                "schema": PLAN_SCHEMA_VERSION,
+                "kind": "block",
+                "fingerprint": plan.fingerprint,
+                "backend": plan.backend,
+                "block_rows": plan.bell.block_rows,
+                "num_rows": plan.bell.num_rows,
+                "num_cols": plan.bell.num_cols,
+                "strategies": list(plan.bell.strategies),
+                "predicted_us": plan.predicted_us,
+                "measured_spmm_us": plan.measured_spmm_us,
+            }
+            arrays = {
+                "bell_val": np.asarray(plan.bell.val),
+                "bell_col": np.asarray(plan.bell.col),
+                "bell_live_w": np.asarray(plan.bell.live_w),
+                "bell_widths": np.asarray(plan.bell.widths, np.int64),
+                "meta": np.frombuffer(
+                    json.dumps(meta).encode(), dtype=np.uint8),
+            }
+        else:
+            meta = {
+                "schema": PLAN_SCHEMA_VERSION,
+                "kind": "global",
+                "config": plan.config.to_dict(),
+                "fingerprint": plan.fingerprint,
+                "features_fp": plan.features_fp,
+                "num_cols": plan.ell.num_cols,
+                "predicted_us": plan.predicted_us,
+                "measured_spmm_us": plan.measured_spmm_us,
+                "measured_sample_us": plan.measured_sample_us,
+                "quant_bits": None if plan.quantized is None
+                else plan.quantized.bits,
+            }
+            arrays = {
+                "ell_val": np.asarray(plan.ell.val),
+                "ell_col": np.asarray(plan.ell.col),
+                "meta": np.frombuffer(
+                    json.dumps(meta).encode(), dtype=np.uint8),
+            }
+            if plan.quantized is not None:
+                arrays["q"] = np.asarray(plan.quantized.q)
+                arrays["q_minmax"] = np.asarray(
+                    [float(plan.quantized.x_min), float(plan.quantized.x_max)],
+                    np.float32)
+        path = self._path(plan.fingerprint, plan.kind)
+        # np.savez appends ".npz" to names lacking it — keep the tmp name
+        # ending in ".npz" so the atomic rename target is what was written.
+        tmp = path.with_name(path.name + ".tmp.npz")
         np.savez(tmp, **arrays)
-        tmp.replace(self._path(plan.fingerprint))
+        os.replace(tmp, path)
 
-    def _load_disk(self, fingerprint: str) -> Optional[TunedPlan]:
-        path = self._path(fingerprint)
+    def _load_disk(self, fingerprint: str,
+                   kind: str = "global") -> Optional[AnyPlan]:
+        path = self._path(fingerprint, kind)
         if not path.exists():
             return None
         try:
             with np.load(path) as z:
                 meta = json.loads(bytes(z["meta"].tobytes()).decode())
+                # Schema gate: entries written by another layout version —
+                # including pre-versioning ones with no stamp — are rejected
+                # (treated as a miss), never reinterpreted.
+                if meta.get("schema") != PLAN_SCHEMA_VERSION:
+                    return None
+                if meta.get("kind", "global") != kind:
+                    return None
+                if kind == "block":
+                    widths = tuple(int(w) for w in z["bell_widths"])
+                    bell = BlockELL(
+                        val=jnp.asarray(z["bell_val"]),
+                        col=jnp.asarray(z["bell_col"]),
+                        live_w=jnp.asarray(z["bell_live_w"]),
+                        widths=widths,
+                        strategies=tuple(meta["strategies"]),
+                        block_rows=int(meta["block_rows"]),
+                        num_rows=int(meta["num_rows"]),
+                        num_cols=int(meta["num_cols"]))
+                    return BlockedPlan(
+                        bell=bell, backend=str(meta["backend"]),
+                        fingerprint=fingerprint,
+                        predicted_us=float(meta.get("predicted_us", 0.0)),
+                        measured_spmm_us=float(
+                            meta.get("measured_spmm_us", 0.0)))
                 ell = ELL(jnp.asarray(z["ell_val"]), jnp.asarray(z["ell_col"]),
                           int(meta["num_cols"]))
                 quantized = None

@@ -1,0 +1,255 @@
+"""BlockELL + per-row-block tuning tests (ISSUE 2 tentpole).
+
+Covers the ISSUE's required cases: property test that BlockELL SpMM matches
+the dense reference for random skewed graphs across block sizes
+{1 row, 256, 4096, > num_rows}; backend parity (ref / jax / pallas) on
+truncating mixed-width plans; ``aes_spmm(strategy="auto",
+granularity="block")`` agreement with the dense reference on all backends;
+the schema-versioned plan-cache round trip (old-schema entries rejected,
+not mis-read); and the LRU bound.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.aes_spmm import aes_spmm
+from repro.core.graph import csr_to_dense
+from repro.core.sampling import sample_csr_to_block_ell
+from repro.kernels import ops, ref
+from repro.tuning import (PLAN_SCHEMA_VERSION, BlockedPlan, PlanCache,
+                          extract_block_features, extract_features,
+                          tune, tune_blocked)
+
+from conftest import random_csr
+
+
+def _quick_blocked(csr, x, cache, **kw):
+    kw.setdefault("block_rows", 16)
+    kw.setdefault("widths", (8, 16))
+    kw.setdefault("warmup", 0)
+    kw.setdefault("iters", 1)
+    return tune_blocked(csr, x, cache=cache, **kw)
+
+
+# ---------------------------------------------------------------------------
+# BlockELL container + sampler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_rows,block_rows", [
+    (48, 1),          # one block per row
+    (300, 256),       # multiple blocks, ragged tail
+    (300, 4096),      # block larger than the graph -> single block
+    (300, 301),       # block_rows > num_rows by one
+])
+def test_block_ell_full_coverage_matches_dense(num_rows, block_rows):
+    """Property: with per-block exact padding ("full"), the blocked SpMM
+    equals the dense reference for random skewed graphs at any block size."""
+    rng = np.random.default_rng(num_rows * 31 + block_rows)
+    g = random_csr(rng, num_rows, 5.0, skew=0.8)
+    x = jnp.asarray(rng.normal(size=(num_rows, 16)).astype(np.float32))
+    num_blocks = max(-(-num_rows // block_rows), 1)
+    bell = sample_csr_to_block_ell(g, [("full", 0)] * num_blocks, block_rows)
+    assert bell.num_blocks == num_blocks
+    assert bell.num_rows == num_rows
+    want = csr_to_dense(g) @ x
+    got = ref.block_ell_spmm(bell, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_ell_invariants(rng):
+    """Dead slots carry the (val=0, col=0) sentinel, live slots are a
+    contiguous prefix of length live_w, offsets tile the flat arrays."""
+    g = random_csr(rng, 70, 6.0, skew=0.8)
+    configs = [("aes", 8), ("sfs", 4), ("afs", 16), ("full", 0), ("aes", 32)]
+    bell = sample_csr_to_block_ell(g, configs, 16)
+    assert len(bell.widths) == len(bell.strategies) == bell.num_blocks == 5
+    offs = bell.slot_offsets()
+    assert offs[0] == 0
+    for b in range(4):
+        assert offs[b + 1] - offs[b] == bell.block_rows * bell.widths[b]
+    # flat arrays = segments + >= max_width of DMA over-read padding, zeroed
+    assert bell.val.shape[0] >= bell.total_slots + bell.max_width
+    tail = np.asarray(bell.val[bell.total_slots:])
+    assert (tail == 0).all()
+    live = np.asarray(bell.live_w)
+    for b in range(bell.num_blocks):
+        v, c = (np.asarray(a) for a in bell.block_segment(b))
+        for r in range(bell.block_rows):
+            lw = live[b * bell.block_rows + r]
+            assert (v[r, lw:] == 0).all() and (c[r, lw:] == 0).all()
+
+
+def test_block_ell_backend_parity(rng):
+    """Truncating mixed-strategy plans: the ref oracle and the Pallas
+    block-dispatched kernel agree bit-for-tolerance."""
+    g = random_csr(rng, 41, 6.0, skew=0.7)
+    x = jnp.asarray(rng.normal(size=(41, 20)).astype(np.float32))
+    configs = [("aes", 8), ("sfs", 4), ("afs", 16), ("full", 0), ("aes", 2),
+               ("sfs", 32)]
+    bell = sample_csr_to_block_ell(g, configs, 8)
+    a = ref.block_ell_spmm(bell, x)
+    b = ops.block_ell_spmm(bell, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_extract_block_features_partitions_the_graph(rng):
+    g = random_csr(rng, 200, 6.0, skew=0.9)
+    whole = extract_features(g, feat_dim=32, with_fingerprint=False)
+    blocks = extract_block_features(g, 64, feat_dim=32)
+    assert len(blocks) == 4             # ceil(200 / 64)
+    assert sum(b.nnz for b in blocks) == whole.nnz
+    assert sum(b.num_rows for b in blocks) == whole.num_rows
+    assert blocks[-1].num_rows == 200 - 3 * 64
+    assert max(b.max_row_nnz for b in blocks) == whole.max_row_nnz
+    assert all(b.fingerprint == "" for b in blocks)
+
+
+# ---------------------------------------------------------------------------
+# granularity="block" end to end
+# ---------------------------------------------------------------------------
+
+def test_auto_block_matches_dense_on_all_backends(rng):
+    """Acceptance gate: with every candidate width >= max row nnz, any
+    tuned blocked plan covers all edges, so the auto-block call must equal
+    the dense reference on every backend."""
+    g = random_csr(rng, 48, 4.0, skew=0.5)
+    wmax = int(np.asarray(g.row_nnz()).max())
+    x = jnp.asarray(rng.normal(size=(48, 12)).astype(np.float32))
+    want = np.asarray(csr_to_dense(g) @ x)
+    for backend in ("jax", "pallas"):
+        cache = PlanCache()
+        got = aes_spmm(g, x, strategy="auto", granularity="block",
+                       plan_cache=cache,
+                       tune_kwargs=dict(block_rows=16, widths=(wmax, 2 * wmax),
+                                        backend=backend, warmup=0, iters=1))
+        assert cache.plans()[0].backend == backend
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_auto_block_second_call_hits_cache(rng, monkeypatch):
+    """A warm blocked plan must never re-sample."""
+    import repro.core.sampling as sampling_mod
+
+    g = random_csr(rng, 32, 5.0)
+    x = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    cache = PlanCache()
+    want = aes_spmm(g, x, strategy="auto", granularity="block",
+                    plan_cache=cache,
+                    tune_kwargs=dict(block_rows=16, widths=(8,),
+                                     warmup=0, iters=1))
+
+    def boom(*a, **k):
+        raise AssertionError("sampling ran on a warm blocked plan cache")
+
+    monkeypatch.setattr(sampling_mod, "sample_csr_to_block_ell", boom)
+    got = aes_spmm(g, x, strategy="auto", granularity="block",
+                   plan_cache=cache)
+    assert cache.stats.hits == 1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_blocked_and_global_plans_coexist(rng):
+    """Same graph, same fingerprint, two kinds — neither evicts the other."""
+    g = random_csr(rng, 40, 5.0)
+    x = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    cache = PlanCache()
+    gp = tune(g, x, widths=(8,), budget=1, warmup=0, iters=1, cache=cache)
+    bp = _quick_blocked(g, x, cache)
+    assert gp.fingerprint == bp.fingerprint
+    assert len(cache) == 2
+    assert cache.get(gp.fingerprint) is gp
+    assert cache.get(bp.fingerprint, kind="block") is bp
+
+
+def test_granularity_block_requires_auto(rng):
+    g = random_csr(rng, 16, 3.0)
+    x = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+    with pytest.raises(ValueError, match="granularity"):
+        aes_spmm(g, x, strategy="aes", granularity="block")
+
+
+# ---------------------------------------------------------------------------
+# plan-cache schema versioning + LRU (ISSUE small fix)
+# ---------------------------------------------------------------------------
+
+def test_blocked_plan_disk_round_trip(rng, tmp_path):
+    g = random_csr(rng, 44, 5.0, skew=0.8)
+    x = jnp.asarray(rng.normal(size=(44, 8)).astype(np.float32))
+    c1 = PlanCache(cache_dir=tmp_path)
+    plan = _quick_blocked(g, x, c1)
+
+    c2 = PlanCache(cache_dir=tmp_path)   # fresh process simulation
+    loaded = c2.get(plan.fingerprint, kind="block")
+    assert isinstance(loaded, BlockedPlan) and c2.stats.disk_hits == 1
+    assert loaded.bell.widths == plan.bell.widths
+    assert loaded.bell.strategies == plan.bell.strategies
+    assert loaded.backend == plan.backend
+    np.testing.assert_array_equal(np.asarray(loaded.bell.val),
+                                  np.asarray(plan.bell.val))
+    np.testing.assert_allclose(np.asarray(loaded.run(x)),
+                               np.asarray(plan.run(x)), rtol=1e-6, atol=1e-6)
+
+
+def test_global_plan_round_trips_versioned_schema(rng, tmp_path):
+    """Regression: a global-width plan survives the new versioned schema,
+    and an entry with the wrong (or missing) stamp is rejected as a miss —
+    never mis-read as a plan."""
+    g = random_csr(rng, 36, 4.0)
+    x = jnp.asarray(rng.normal(size=(36, 8)).astype(np.float32))
+    c1 = PlanCache(cache_dir=tmp_path)
+    plan = tune(g, x, widths=(8, 16), budget=1, warmup=0, iters=1, cache=c1)
+
+    path = c1._path(plan.fingerprint)
+    with np.load(path) as z:
+        arrays = dict(z)
+        meta = json.loads(bytes(arrays["meta"].tobytes()).decode())
+    assert meta["schema"] == PLAN_SCHEMA_VERSION
+    assert PlanCache(cache_dir=tmp_path).get(plan.fingerprint) is not None
+
+    # pre-versioning entry (no stamp at all, the PR-1 layout)
+    del meta["schema"]
+    arrays["meta"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+    c2 = PlanCache(cache_dir=tmp_path)
+    assert c2.get(plan.fingerprint) is None
+    assert c2.stats.misses == 1
+
+    # future-schema entry
+    meta["schema"] = PLAN_SCHEMA_VERSION + 1
+    arrays["meta"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+    assert PlanCache(cache_dir=tmp_path).get(plan.fingerprint) is None
+
+
+def test_plan_cache_lru_bound(rng, monkeypatch):
+    g = random_csr(rng, 20, 3.0)
+    x = jnp.asarray(rng.normal(size=(20, 4)).astype(np.float32))
+    base = tune(g, x, widths=(4,), budget=1, warmup=0, iters=1,
+                cache=PlanCache())
+
+    cache = PlanCache(max_plans=3)
+    for i in range(5):
+        cache.put(base.__class__(
+            config=base.config, ell=base.ell, quantized=None,
+            fingerprint=f"fp{i}"))
+    assert len(cache) == 3
+    assert cache.get("fp0") is None and cache.get("fp1") is None
+    assert cache.get("fp4") is not None
+
+    # a hit refreshes recency: fp2 survives the next insertion, fp3 doesn't
+    assert cache.get("fp2") is not None
+    cache.put(base.__class__(config=base.config, ell=base.ell,
+                             quantized=None, fingerprint="fp5"))
+    assert cache.get("fp2") is not None and cache.get("fp3") is None
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE_MAX", "7")
+    assert PlanCache().max_plans == 7
+    assert PlanCache(max_plans=2).max_plans == 2   # explicit beats env
