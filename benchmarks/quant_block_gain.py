@@ -1,0 +1,78 @@
+"""Quantized-vs-float blocked serving: feature bytes moved + latency.
+
+The paper's second headline result (§3.1, Table 3): INT8 feature load +
+on-device dequantization cuts feature data loading time 50.91%-70.51% at
+<= 0.3% accuracy loss.  PR 3 carries that win onto the blocked path — the
+``BlockedPlan`` caches the uint8 operand and the block kernel fuses Eq. 2
+into its B-row gather — so this benchmark compares two blocked plans over
+the same bimodal graph:
+
+  * ``quant_block/<case>/float`` — the float blocked plan: steady-state
+    latency + the feature bytes its serving moves (one-time f32 load +
+    per-request f32 B-row gathers over the live ELL slots);
+  * ``quant_block/<case>/int8``  — the quantized blocked plan: same graph,
+    same per-block configs, uint8 operand through the fused-dequant
+    gather.  ``bytes_ratio`` is float-bytes / int8-bytes — the acceptance
+    gate is >= 2x (int8 vs f32 is 4x by construction; the ratio is
+    measured off the actual plans, not assumed).
+
+Both plans tune with the same knobs, so the sampled BlockELL (and thus the
+live-edge count) is identical — the comparison isolates the feature-dtype
+traffic, which is exactly the quantity the paper's Table 3 improves.
+
+Caveat on the latency column: on the CPU ``jax`` backend (the default off
+TPU) the quantized plan materializes the Eq. 2 reconstruction every call,
+so ``speedup_vs_float`` can dip below 1 — the fused in-gather dequant that
+converts the byte saving into time runs on the ``pallas`` backend, where
+the gather is the memory-bound hot loop.  ``bytes_ratio`` is
+backend-independent and is the acceptance gate (>= 2x).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.block_tuning_gain import ACCURACY_WEIGHT, bimodal_csr
+from benchmarks.common import emit, time_fn
+from repro.core.quantization import gather_bytes, loading_bytes
+from repro.tuning import PlanCache
+from repro.tuning.autotune import tune_blocked
+
+WIDTHS = (8, 32, 128)
+BLOCK_ROWS = 1024
+FEAT_DIM = 64
+
+
+def plan_feature_bytes(plan, feat_dim: int) -> int:
+    """Feature bytes one serving pass moves for a blocked plan: the one-time
+    matrix load plus the per-request B-row gather over live ELL slots, in
+    the plan's serving dtype (uint8/uint16 when quantized, f32 otherwise)."""
+    bits = None if plan.quantized is None else plan.quantized.bits
+    nodes = plan.bell.num_cols
+    return (loading_bytes(nodes, feat_dim, bits)
+            + gather_bytes(plan.bell.live_edges(), feat_dim, bits))
+
+
+def run(cases=(("bimodal-8k", 8192, 0.08, 192, 4),)):
+    for name, num_rows, head_frac, head_deg, tail_deg in cases:
+        g = bimodal_csr(num_rows, head_frac, head_deg, tail_deg)
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(num_rows, FEAT_DIM)).astype(np.float32)
+        knobs = dict(block_rows=BLOCK_ROWS, widths=WIDTHS,
+                     accuracy_weight=ACCURACY_WEIGHT)
+
+        fplan = tune_blocked(g, x, cache=PlanCache(), **knobs)
+        f_us = time_fn(fplan.run, x)
+        f_bytes = plan_feature_bytes(fplan, FEAT_DIM)
+        emit(f"quant_block/{name}/float", f_us,
+             f"feature_bytes={f_bytes},"
+             f"buckets={len(fplan.buckets)},"
+             f"live_edges={fplan.bell.live_edges()}")
+
+        qplan = tune_blocked(g, x, quant=8, cache=PlanCache(), **knobs)
+        q_us = time_fn(qplan.run, x)
+        q_bytes = plan_feature_bytes(qplan, FEAT_DIM)
+        emit(f"quant_block/{name}/int8", q_us,
+             f"feature_bytes={q_bytes},"
+             f"bytes_ratio={f_bytes / max(q_bytes, 1):.2f},"
+             f"buckets={len(qplan.buckets)},"
+             f"speedup_vs_float={f_us / max(q_us, 1e-9):.2f}")

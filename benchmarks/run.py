@@ -9,7 +9,7 @@ import sys
 def main() -> None:
     from benchmarks import (accuracy_vs_w, autotune_gain, block_tuning_gain,
                             kernel_blocks, kernel_speedup, motivation,
-                            quant_loading, sampling_cdf)
+                            quant_block_gain, quant_loading, sampling_cdf)
 
     print("name,us_per_call,derived")
     sampling_cdf.run()
@@ -20,6 +20,7 @@ def main() -> None:
     kernel_blocks.run()
     autotune_gain.run()
     block_tuning_gain.run()
+    quant_block_gain.run()
     try:
         from benchmarks import roofline
         roofline.report()

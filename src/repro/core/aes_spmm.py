@@ -13,14 +13,19 @@ the execution path; all paths agree to float tolerance (tests assert it).
 picks (strategy, W, backend, quant) per graph from sparsity features +
 microbenchmarks, and the sampled ELL operand is cached under the graph's
 fingerprint — repeated calls with the same graph skip sampling entirely.
-``sh_width``/``backend``/``quantized`` are then ignored (the plan carries
-its own); pass ``plan_cache`` to control cache scope (default: process-wide).
+``sh_width``/``backend`` are then ignored (the plan carries its own);
+``quantized`` feeds the blocked tuner under ``granularity="block"`` but is
+ignored for graph granularity, where the tuner makes its own quant choice.
+Pass ``plan_cache`` to control cache scope (default: process-wide).
 
 ``granularity="block"`` (auto only) tunes (strategy, W) *per fixed-size row
 block* instead of once per graph and serves from a stitched mixed-width
 BlockELL operand — the right tool for bimodal/power-law degree
 distributions, where one global width over-samples the dense head or wastes
-width on the sparse tail.
+width on the sparse tail.  The blocked path is quantization-aware: pass
+``quantized=`` (or ``tune_kwargs=dict(quant=8)``) and the plan caches the
+uint8 operand, serving it through a fused dequantize-then-aggregate gather
+in width-bucketed kernel launches.
 """
 from __future__ import annotations
 
@@ -64,7 +69,9 @@ def aes_spmm(csr: CSR, features, sh_width: int = 128, *,
         "auto" — the tuned plan carries its own backend).
       granularity: "graph" (default) tunes one global config; "block"
         (auto only) tunes per row block and serves a mixed-width BlockELL.
-      quantized: optional pre-quantized B (int8/int16 gather path).
+      quantized: optional pre-quantized B (int8/int16 gather path).  Under
+        ``strategy="auto"`` it is honored for ``granularity="block"`` (the
+        plan caches it) and ignored for graph granularity.
       plan_cache / tune_kwargs: auto-mode cache scope and ``tune()`` /
         ``tune_blocked()`` overrides.
 
@@ -76,11 +83,22 @@ def aes_spmm(csr: CSR, features, sh_width: int = 128, *,
         raise ValueError(f"unknown granularity {granularity!r} "
                          "(expected 'graph' or 'block')")
     if strategy == "auto":
+        if isinstance(features, QuantizedFeatures):
+            # normalize: the tuner wants the dense reconstruction as the
+            # serving operand and the quantized matrix as the quant source
+            if quantized is None:
+                quantized = features
+            features = dequantize(features)
         if granularity == "block":
             from repro.tuning.autotune import tune_blocked
 
-            plan = tune_blocked(csr, features, cache=plan_cache,
-                                **(tune_kwargs or {}))
+            kw = dict(tune_kwargs or {})
+            if quantized is not None:
+                # pre-quantized B rides into the blocked plan: the tuner
+                # reuses it (no second lossy pass) and serves the
+                # fused-dequant path
+                kw.setdefault("quant", quantized)
+            plan = tune_blocked(csr, features, cache=plan_cache, **kw)
         else:
             from repro.tuning.autotune import tune
 

@@ -149,6 +149,72 @@ class BlockELL(NamedTuple):
         return int(np.asarray(self.live_w)[:self.num_rows].sum())
 
 
+def partition_width_buckets(widths, max_buckets: int = 3) -> tuple:
+    """Partition BlockELL blocks into <= ``max_buckets`` width buckets.
+
+    Pallas copy sizes are static, so a single launch over mixed-width blocks
+    must DMA every row at ``max(widths)`` — narrow tail blocks pay the dense
+    head's width.  Launching once per *bucket* instead lets each launch use
+    its own static row-DMA width (the bucket's max).  This chooses the
+    partition: group the distinct widths into at most ``max_buckets``
+    contiguous (in sorted-width order) groups minimizing the total
+    over-read, ``sum_b (bucket_width - widths[b])`` over blocks — exact DP,
+    deterministic, O(#distinct_widths^2 * max_buckets).
+
+    Args:
+      widths: per-block ELL widths (``BlockELL.widths``).
+      max_buckets: launch budget (2-3 captures most of the win; 1 recovers
+        the single-launch max-width behavior).
+
+    Returns a tuple of ``(bucket_width, block_ids)`` pairs, ascending by
+    width, where ``bucket_width = max(widths[i] for i in block_ids)`` and
+    ``block_ids`` is an ascending tuple.  The ``block_ids`` concatenated
+    over all buckets are a permutation of ``range(len(widths))`` — no block
+    dropped or duplicated (property-tested).
+    """
+    widths = tuple(int(w) for w in widths)
+    if not widths:
+        return ()
+    max_buckets = max(int(max_buckets), 1)
+    uniq = sorted(set(widths))
+    counts = [sum(1 for w in widths if w == u) for u in uniq]
+    m = len(uniq)
+    k = min(max_buckets, m)
+
+    # cost[i][j]: over-read of one bucket covering uniq[i..j] (width uniq[j])
+    cost = [[0] * m for _ in range(m)]
+    for i in range(m):
+        for j in range(i, m):
+            cost[i][j] = sum(counts[t] * (uniq[j] - uniq[t])
+                             for t in range(i, j + 1))
+    # best[i][g]: min cost splitting uniq[i:] into exactly g buckets
+    INF = float("inf")
+    best = [[INF] * (k + 1) for _ in range(m + 1)]
+    cut = [[m] * (k + 1) for _ in range(m + 1)]
+    best[m][0] = 0.0
+    for i in range(m - 1, -1, -1):
+        for g in range(1, k + 1):
+            for j in range(i, m):
+                c = cost[i][j] + best[j + 1][g - 1]
+                if c < best[i][g]:
+                    best[i][g], cut[i][g] = c, j
+    g = min(range(1, k + 1), key=lambda gg: (best[0][gg], gg))
+    bounds, i = [], 0
+    while i < m:
+        j = cut[i][g]
+        bounds.append(uniq[j])
+        i, g = j + 1, g - 1
+
+    buckets = []
+    lo = -1
+    for hi in bounds:
+        ids = tuple(b for b, w in enumerate(widths) if lo < w <= hi)
+        if ids:
+            buckets.append((max(widths[b] for b in ids), ids))
+        lo = hi
+    return tuple(buckets)
+
+
 def ell_live_widths(val: jax.Array, col: jax.Array) -> jax.Array:
     """Per-row live-prefix lengths of an ELL segment, decoded from the
     padding sentinel (dead slot == ``val == 0 and col == 0``; live slots

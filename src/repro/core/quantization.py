@@ -4,8 +4,13 @@ Features are quantized *offline* with a single global (x_min, x_max) pair to
 ``b``-bit unsigned integers (paper uses INT8, b=8), stored/loaded in the
 compact dtype, and dequantized on the accelerator before aggregation:
 
-    q    = floor((x - x_min) / (x_max - x_min) * (2^b - 1))        (Eq. 1)
+    q    = round((x - x_min) / (x_max - x_min) * (2^b - 1))        (Eq. 1)
     x^   = q * (x_max - x_min) / (2^b - 1) + x_min                 (Eq. 2)
+
+The paper's Eq. 1 floors; rounding to the nearest level halves the
+worst-case reconstruction error (<= scale/2 instead of < scale) at
+identical cost, so this implementation rounds — Eq. 2 is unchanged and
+every dequant consumer is agnostic to the choice.
 
 Lossy by construction; the paper measures <= 0.3% accuracy impact.
 """
@@ -44,7 +49,8 @@ def storage_dtype(bits: int):
 def _quantize(x, x_min, x_max, bits: int):
     levels = 2**bits - 1
     span = jnp.maximum(x_max - x_min, jnp.finfo(x.dtype).tiny)
-    q = jnp.floor((x - x_min) / span * levels)
+    # round-half-up to the nearest level: |x - x^| <= scale/2 elementwise
+    q = jnp.floor((x - x_min) / span * levels + 0.5)
     return jnp.clip(q, 0, levels).astype(storage_dtype(bits))
 
 
@@ -55,6 +61,21 @@ def quantize(x: jax.Array, bits: int = 8) -> QuantizedFeatures:
     x_max = x.max()
     return QuantizedFeatures(q=_quantize(x, x_min, x_max, bits), x_min=x_min,
                              x_max=x_max, bits=bits)
+
+
+def as_quantized(features, bits: int) -> QuantizedFeatures:
+    """``features`` as a ``bits``-wide :class:`QuantizedFeatures`.
+
+    Accepts either a dense matrix (quantized here, Eq. 1) or an
+    already-quantized operand: a matching-width ``QuantizedFeatures`` passes
+    through untouched (no re-quantization, no extra loss), a mismatched one
+    is re-quantized from its Eq. 2 reconstruction.
+    """
+    if isinstance(features, QuantizedFeatures):
+        if features.bits == bits:
+            return features
+        features = dequantize(features)
+    return quantize(features, bits)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "dtype"))
@@ -80,3 +101,11 @@ def loading_bytes(num_nodes: int, feat: int, bits: int | None) -> int:
     if bits is None:
         return num_nodes * feat * 4
     return num_nodes * feat * jnp.dtype(storage_dtype(bits)).itemsize
+
+
+def gather_bytes(live_edges: int, feat: int, bits: int | None) -> int:
+    """Bytes the SpMM's B-row gather moves: one ``feat``-wide feature row per
+    live ELL slot.  This is the steady-state hot-loop traffic the fused
+    dequant path shrinks (the load in :func:`loading_bytes` is one-time)."""
+    itemsize = 4 if bits is None else int(jnp.dtype(storage_dtype(bits)).itemsize)
+    return live_edges * feat * itemsize

@@ -15,15 +15,21 @@ from repro.gnn.train import accuracy
 def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
              strategy: str = "aes", backend: str = "jax",
              quantize_bits: Optional[int] = None,
-             plan_cache=None) -> float:
+             granularity: str = "graph",
+             plan_cache=None, tune_kwargs=None) -> float:
     """Test accuracy under the given kernel configuration.
 
     ``strategy="auto"`` delegates the whole (strategy, W, backend, quant)
     choice to ``repro.tuning``: the first aggregation tunes + caches a plan
     for the adjacency, every later aggregation (the second GCN layer, other
     models on the same graph, repeated evaluate calls) is a plan-cache hit
-    that reuses the sampled ELL operand.  ``sh_width``/``backend``/
-    ``quantize_bits`` are ignored in that mode.
+    that reuses the sampled ELL operand.  ``sh_width`` and ``backend`` are
+    ignored in that mode; ``granularity="block"`` selects the per-row-block
+    mixed-width plan, where ``quantize_bits`` pre-quantizes the input
+    features into the plan (the paper's offline-quantization protocol —
+    hidden-layer activations fall back to the float path via the plan's
+    feature-hash guard).  ``tune_kwargs`` forwards tuner overrides
+    (``block_rows``, ``widths``, ...).
     """
     _, fwd, adj_name = MODELS[model]
     adj = getattr(ds, adj_name)
@@ -32,12 +38,22 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
     if strategy == "auto":
         from repro.core.aes_spmm import aes_spmm
 
+        tk = dict(tune_kwargs or {})
+        if granularity == "block" and quantize_bits is not None:
+            tk.setdefault("quant", quantize_bits)
+
         def agg(csr, h):
-            return aes_spmm(csr, h, strategy="auto", plan_cache=plan_cache)
+            return aes_spmm(csr, h, strategy="auto", granularity=granularity,
+                            plan_cache=plan_cache, tune_kwargs=tk or None)
 
         logits = fwd(params, adj, feats, agg)
         return float(accuracy(logits, ds.labels,
                               ds.test_mask.astype(jnp.float32)))
+
+    if granularity != "graph":
+        # mirror aes_spmm: per-block configs are the tuner's to pick
+        raise ValueError(
+            'granularity="block" requires strategy="auto"')
 
     quantized = None
     if quantize_bits is not None:

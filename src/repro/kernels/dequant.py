@@ -15,8 +15,18 @@ from jax.experimental import pallas as pl
 from repro.kernels.pallas_compat import pltpu
 
 
+def dequant_epilogue(q, scale, x_min, dtype=jnp.float32):
+    """Eq. 2 as a reusable in-kernel epilogue: ``q * scale + x_min``.
+
+    Shared by this standalone kernel and the fused-dequant gathers in
+    ``ell_spmm.py`` (both the fixed-width and the block-dispatched SpMM),
+    so the dequantization math has exactly one home.
+    """
+    return q.astype(dtype) * scale + x_min
+
+
 def _dequant_kernel(q_ref, out_ref, *, scale: float, x_min: float):
-    out_ref[...] = q_ref[...].astype(jnp.float32) * scale + x_min
+    out_ref[...] = dequant_epilogue(q_ref[...], scale, x_min)
 
 
 @functools.partial(

@@ -16,9 +16,13 @@ This is the SpMM stage of Algorithm 1 (lines 16-19), re-thought for TPU
     paper's ``for k <- 0 to W`` with the same dynamic bound
     ``W = min(row_nnz, sh_width)``.
 
-A quantized variant (``quantized=True``) keeps B as uint8 in HBM and fuses
-Eq. 2 dequantization into the gather — beyond-paper: it cuts the gather's
-HBM bytes 4x, and the gather is the memory-bound hot loop on TPU.
+A quantized variant (``quantized=True``, available on both the fixed-width
+and the block-dispatched kernel) keeps B as uint8 in HBM and fuses Eq. 2
+dequantization into the gather — beyond-paper: it cuts the gather's HBM
+bytes 4x, and the gather is the memory-bound hot loop on TPU.  The blocked
+kernel is additionally launched once per *width bucket* by the ops wrapper,
+so narrow tail blocks stage their rows with a narrow static DMA instead of
+the global max width.
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from repro.kernels.dequant import dequant_epilogue
 from repro.kernels.pallas_compat import pltpu
 
 
@@ -71,7 +76,7 @@ def _ell_spmm_kernel(val_ref, col_ref, live_ref, b_ref, out_ref,
             b_row_copy(col_ref[r, k], slot).wait()
             row = scratch[slot, 0, :]
             if quantized:
-                row = row.astype(jnp.float32) * scale + x_min
+                row = dequant_epilogue(row, scale, x_min)
             return acc + val_ref[r, k] * row
 
         acc = jax.lax.fori_loop(
@@ -130,14 +135,16 @@ def ell_spmm(ell_val, ell_col, live_w, b, *, block_r: int = 8,
 
 def _block_ell_spmm_kernel(table_ref, live_ref, val_ref, col_ref, b_ref,
                            out_ref, stage_v, stage_c, bsc, ssem, bsem,
-                           *, block_f: int, max_w: int, block_rows: int):
+                           *, block_f: int, max_w: int, block_rows: int,
+                           quantized: bool, scale: float, x_min: float):
     """grid = (num_blocks, feat_tiles) — one program per (row block x F tile).
 
     table_ref: i32[1, 2]          VMEM  this block's (slot offset, width)
     live_ref:  i32[block_rows, 1] VMEM  live slots per row
     val_ref:   f32[slots + max_w] HBM   flattened mixed-width segments
     col_ref:   i32[slots + max_w] HBM
-    b_ref:     [num_nodes, F]     HBM   dense features
+    b_ref:     [num_nodes, F]     HBM   dense features (f32, or the quantized
+        storage dtype when ``quantized`` — Eq. 2 fuses into the gather)
     out_ref:   f32[block_rows, block_f] VMEM
     stage_v/stage_c: VMEM[max_w]  row-slot landing zones (one DMA per row,
         maximal static size; the live_w bound masks the tail)
@@ -145,9 +152,11 @@ def _block_ell_spmm_kernel(table_ref, live_ref, val_ref, col_ref, b_ref,
 
     Each program reads its own width from the block table.  The economy of
     a narrow tail block is in its accumulation loop (live_w-bounded) and
-    its HBM footprint (narrow flat segments); the row staging DMA itself is
-    always ``max_w`` wide — Pallas copy sizes are static, so truly narrow
-    DMAs need one specialized launch per width group (ROADMAP follow-up).
+    its HBM footprint (narrow flat segments); the row staging DMA is
+    ``max_w`` wide — Pallas copy sizes are static, so the ops wrapper
+    groups blocks into *width buckets* and issues one launch per bucket
+    with ``max_w`` = that bucket's widest block, keeping narrow blocks off
+    max-width DMAs.
     """
     f_start = pl.program_id(1) * block_f
     seg_off = table_ref[0, 0]
@@ -185,7 +194,10 @@ def _block_ell_spmm_kernel(table_ref, live_ref, val_ref, col_ref, b_ref,
                 b_copy(pl.load(stage_c, (k + 1,)), jax.lax.rem(k + 1, 2)).start()
 
             b_copy(pl.load(stage_c, (k,)), slot).wait()
-            return acc + pl.load(stage_v, (k,)) * bsc[slot, 0, :]
+            row = bsc[slot, 0, :]
+            if quantized:
+                row = dequant_epilogue(row, scale, x_min)
+            return acc + pl.load(stage_v, (k,)) * row
 
         acc = jax.lax.fori_loop(0, live, k_body,
                                 jnp.zeros((block_f,), jnp.float32))
@@ -197,20 +209,28 @@ def _block_ell_spmm_kernel(table_ref, live_ref, val_ref, col_ref, b_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_rows", "block_f", "max_w", "interpret"))
+    static_argnames=("block_rows", "block_f", "max_w", "quantized",
+                     "scale", "x_min", "interpret"))
 def block_ell_spmm(table, live_w, val_flat, col_flat, b, *, block_rows: int,
-                   max_w: int, block_f: int = 128, interpret: bool = True):
+                   max_w: int, block_f: int = 128, quantized: bool = False,
+                   scale=1.0, x_min=0.0, interpret: bool = True):
     """C[r, :] = sum_k seg_val[r, k] * B[seg_col[r, k], :] over mixed-width
     block segments.
 
     Args:
       table: i32[num_blocks, 2] — per-block (flat slot offset, ELL width).
+        With width bucketing the ops wrapper passes only one bucket's
+        blocks here; the launch is then ``max_w``-wide for exactly those.
       live_w: i32[num_blocks * block_rows] live slots per row.
       val_flat / col_flat: flattened segments, padded by >= ``max_w``
         trailing elements so the fixed-size row DMA never over-reads
         (``repro.kernels.ops.block_ell_spmm`` pads).
-      b: dense operand [num_nodes, feat]; feat % block_f == 0.
-      max_w: max(widths) — static row-DMA size.
+      b: dense operand [num_nodes, feat]; feat % block_f == 0.  f32, or the
+        quantized storage dtype (uint8/uint16) when ``quantized``.
+      max_w: max width over the blocks in ``table`` — static row-DMA size.
+      quantized / scale / x_min: fuse Eq. 2 (``b * scale + x_min``) into
+        the B-row gather, so the hot loop moves 1-2 bytes per feature
+        instead of 4.
 
     Returns f32[num_blocks * block_rows, feat].
     """
@@ -221,7 +241,8 @@ def block_ell_spmm(table, live_w, val_flat, col_flat, b, *, block_rows: int,
 
     grid = (num_blocks, feat // block_f)
     kernel = functools.partial(_block_ell_spmm_kernel, block_f=block_f,
-                               max_w=max_w, block_rows=block_rows)
+                               max_w=max_w, block_rows=block_rows,
+                               quantized=quantized, scale=scale, x_min=x_min)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -77,33 +77,48 @@ def ell_spmm(ell: ELL, b, live_w=None, *, block_r: int = 8,
     return out[:rows, :feat]
 
 
-def block_ell_spmm(bell: BlockELL, b, *, block_f: int = 128, interpret=None):
-    """Block-dispatched Pallas SpMM over a mixed-width BlockELL operand.
+def block_ell_spmm(bell: BlockELL, b, *, block_f: int = 128,
+                   quantized_meta=None, buckets=None, interpret=None):
+    """Block-dispatched Pallas SpMM over a mixed-width BlockELL operand,
+    launched once per width bucket.
 
     One Pallas program per (row block x feature tile); each program reads
     its own (offset, width) from the block table, so tail blocks tuned to a
-    narrow width do proportionally less DMA and accumulation work.
+    narrow width do proportionally less DMA and accumulation work.  Blocks
+    are grouped into width buckets and each bucket gets its own launch with
+    a static row-DMA width equal to the bucket max — narrow blocks stop
+    issuing max-width staging DMAs.
 
     Args:
       bell: the stitched mixed-width operand (see ``core.graph.BlockELL``).
-      b: dense operand [num_nodes, feat] (f32; quantized B is not supported
-        on the blocked path yet).
+      b: dense operand [num_nodes, feat] — f32, or the quantized storage
+        dtype (uint8/uint16) when ``quantized_meta`` is given.
       block_f: feature-tile size (feat is padded up to a multiple).
+      quantized_meta: ``(scale, x_min)`` enables the fused-dequant gather
+        (Eq. 2 fused into the B-row fetch; B must then be quantized).
+      buckets: explicit width-bucket partition ``((bucket_w, block_ids),
+        ...)`` as produced by ``core.graph.partition_width_buckets`` —
+        a tuned ``BlockedPlan`` passes its cached bucket table.  Default:
+        computed here from ``bell.widths``.  A *partial* partition (not
+        covering every block) is allowed — uncovered blocks' output rows
+        stay zero — which the tuner's per-bucket microbenchmarks use to
+        time one bucket in isolation.
       interpret: force Pallas interpret mode (default: interpret off-TPU).
 
     Returns:
       f32[bell.num_rows, feat] — padded trailing rows sliced off.
     """
+    from repro.core.graph import partition_width_buckets
+
     interpret = _interpret_default() if interpret is None else interpret
     feat = b.shape[1]
-    max_w = bell.max_width
-    table = jnp.asarray(
-        [[off, w] for off, w in zip(bell.slot_offsets(), bell.widths)],
-        jnp.int32)
-    # The fixed-size row DMA over-reads up to max_w past the last segment;
-    # the stitcher pre-pads the flat arrays for this (plans built by other
-    # means fall back to a per-call pad).
-    need = bell.total_slots + max_w
+    if buckets is None:
+        buckets = partition_width_buckets(bell.widths)
+    # The fixed-size row DMA over-reads up to its bucket width (<= global
+    # max_width) past the last segment; the stitcher pre-pads the flat
+    # arrays for this (plans built by other means fall back to a per-call
+    # pad).
+    need = bell.total_slots + bell.max_width
     if bell.val.shape[0] >= need:
         val_flat, col_flat = bell.val, bell.col
     else:
@@ -111,9 +126,44 @@ def block_ell_spmm(bell: BlockELL, b, *, block_f: int = 128, interpret=None):
         val_flat = jnp.pad(bell.val, (0, short))
         col_flat = jnp.pad(bell.col, (0, short))
     bp = _pad_to(b, block_f, 1)
-    out = _block_ell_spmm_kernel(table, bell.live_w, val_flat, col_flat, bp,
-                                 block_rows=bell.block_rows, max_w=max_w,
-                                 block_f=block_f, interpret=interpret)
+    kw = {}
+    if quantized_meta is not None:
+        scale, x_min = quantized_meta
+        kw = dict(quantized=True, scale=float(scale), x_min=float(x_min))
+
+    offs = bell.slot_offsets()
+    br = bell.block_rows
+    live2d = bell.live_w.reshape(bell.num_blocks, br)
+    results, order = [], []
+    for bucket_w, ids in buckets:
+        table = jnp.asarray([[offs[i], bell.widths[i]] for i in ids],
+                            jnp.int32)
+        lw = bell.live_w if ids == tuple(range(bell.num_blocks)) \
+            else live2d[jnp.asarray(ids, jnp.int32)].reshape(-1)
+        results.append(_block_ell_spmm_kernel(
+            table, lw, val_flat, col_flat, bp,
+            block_rows=br, max_w=bucket_w,
+            block_f=block_f, interpret=interpret, **kw))
+        order.extend(ids)
+
+    # Reassembly costs one copy, not one full-output scatter per bucket:
+    # concatenate the per-bucket results (block order = `order`) and map
+    # back to row order with a single static gather — or, for a partial
+    # partition (bucket microbenchmarks), one scatter into zeros.
+    stacked = results[0] if len(results) == 1 \
+        else jnp.concatenate(results, axis=0)
+    if order == list(range(bell.num_blocks)):
+        return stacked[:bell.num_rows, :feat]
+    if len(order) == bell.num_blocks:
+        pos = {b: p for p, b in enumerate(order)}
+        gather = np.concatenate(
+            [np.arange(pos[b] * br, (pos[b] + 1) * br)
+             for b in range(bell.num_blocks)])
+        return stacked[jnp.asarray(gather, jnp.int32)][:bell.num_rows, :feat]
+    rows_idx = np.concatenate(
+        [np.arange(i * br, (i + 1) * br) for i in order])
+    out = jnp.zeros((bell.padded_rows, bp.shape[1]), jnp.float32)
+    out = out.at[jnp.asarray(rows_idx, jnp.int32)].set(stacked)
     return out[:bell.num_rows, :feat]
 
 

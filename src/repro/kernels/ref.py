@@ -65,6 +65,20 @@ def dequantize(q, x_min, x_max, bits: int = 8):
     return q.astype(jnp.float32) * scale + x_min
 
 
+def quant_block_ell_spmm(bell, qf):
+    """Dequantize-then-SpMM oracle for the fused quantized blocked kernel:
+    materialize Eq. 2 (:func:`dequantize`) and run the exact blocked
+    aggregation — the ground truth ``kernels.ops.block_ell_spmm(...,
+    quantized_meta=...)`` must match to float tolerance.
+
+    Args:
+      bell: a ``repro.core.graph.BlockELL``.
+      qf: a ``repro.core.quantization.QuantizedFeatures``.
+    """
+    x = dequantize(qf.q, qf.x_min, qf.x_max, qf.bits)
+    return block_ell_spmm(bell, x)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "sh_width"))
 def aes_spmm(row_ptr, col_ind, val, b, sh_width: int, bits: int | None = None,
              x_min=None, x_max=None):

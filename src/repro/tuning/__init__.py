@@ -41,7 +41,11 @@ extracts features *per block* (``extract_block_features``), lets the cost
 model rank (strategy, W) independently for each block, and stitches the
 winners into a mixed-width ``BlockELL`` operand served by a block-dispatched
 kernel — a ``BlockedPlan`` cached beside the global kind under the same
-fingerprint.
+fingerprint.  The blocked path is quantization-aware (``quant=8|16`` caches
+the uint8 operand; the kernel fuses Eq. 2 into its gather) and launches are
+*width-bucketed*: blocks group into <= 3 width buckets, each launched with
+its own static row-DMA width, the partition picked by per-bucket
+microbenchmarks (``measure.measure_blocked_buckets``).
 
 Entry points: ``tune``, ``tune_blocked``, ``TunedPlan``, ``BlockedPlan``,
 ``PlanCache``, ``PLAN_SCHEMA_VERSION``, ``CandidateConfig``,

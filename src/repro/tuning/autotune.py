@@ -37,7 +37,7 @@ from repro.tuning import cost_model, features as features_mod, measure
 from repro.tuning.cost_model import (CandidateConfig, DEFAULT_WIDTHS,
                                      MachineModel, default_grid)
 from repro.tuning.plan_cache import (BlockedPlan, PlanCache, TunedPlan,
-                                     default_cache)
+                                     default_cache, features_fingerprint)
 
 
 def _default_backends() -> tuple[str, ...]:
@@ -69,6 +69,13 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
     if plan is not None:
         return plan
 
+    from repro.core.quantization import QuantizedFeatures, dequantize
+
+    if isinstance(features, QuantizedFeatures):
+        # global tuning works on the dense operand; a pre-quantized input
+        # stands for its Eq. 2 reconstruction (quantized candidates
+        # re-derive the same levels from it)
+        features = np.asarray(dequantize(features))
     synthetic_features = features is None
     if synthetic_features:
         rng = np.random.default_rng(0)
@@ -97,8 +104,6 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
                               accuracy_weight=accuracy_weight)
     best = measured[0]
     ell, quantized = measure.prepare_operand(csr, best.config, features)
-    from repro.tuning.plan_cache import features_fingerprint
-
     plan = TunedPlan(
         config=best.config, ell=ell, quantized=quantized, fingerprint=fp,
         features_fp=(features_fingerprint(features)
@@ -114,10 +119,13 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                  strategies: Sequence[str] = ("aes", "afs", "sfs"),
                  backend: str | None = None,
                  include_full: bool = True,
+                 quant=None,
+                 max_buckets: int = 3,
                  machine: MachineModel | None = None,
                  accuracy_weight: float = 5.0,
                  cache: PlanCache | None = None,
                  measure_plan: bool = True,
+                 measure_buckets: bool = True,
                  warmup: int = 1, iters: int = 3,
                  verbose: bool = False) -> BlockedPlan:
     """Pick (strategy, W) *per fixed-size row block* and cache the stitched
@@ -127,13 +135,21 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
     (+ ``full``) with its own sparsity features, so a bimodal degree
     distribution gets a wide config on its dense head and a narrow one on
     its sparse tail instead of one global compromise.  Per-block
-    microbenchmarks would cost ``num_blocks x budget`` timings, so unlike
-    :func:`tune` the empirical pass here times the stitched plan once
-    (``measure_plan``) for reporting, not selection.
+    microbenchmarks would cost ``num_blocks x budget`` timings; instead the
+    empirical pass here works per *width bucket*: candidate bucket
+    partitions (1..``max_buckets`` buckets over the blocks' widths) are
+    each timed end-to-end on the live backend
+    (``measure.measure_bucket_partition``) and the measured-fastest wins;
+    the winner's launches are then timed bucket-by-bucket
+    (``measure.measure_blocked_buckets``) for the plan's per-bucket
+    breakdown — and the whole stitched plan once (``measure_plan``) for
+    reporting.
 
     Args:
       csr / features: as in :func:`tune` (synthetic f32[rows, 64] stands in
-        when ``features`` is omitted).
+        when ``features`` is omitted).  ``features`` may itself be a
+        pre-quantized ``QuantizedFeatures`` — the plan then serves its
+        Eq. 2 reconstruction through the fused-dequant path.
       block_rows: rows per block (the ROADMAP's 4k-row tiles by default).
       widths: candidate ELL widths per block.
       strategies: sampled strategies in each block's grid.
@@ -142,17 +158,33 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
         backend — per-block backends would fragment dispatch.
       include_full: also offer exact padding (width = block max nnz) per
         block — on sparse tail blocks this is usually the winner.
+      quant: quantize the features for serving — ``None`` (float), a bit
+        width (8/16: the real ``features`` matrix is pre-quantized per
+        Eq. 1 and cached with the plan), or a ready ``QuantizedFeatures``
+        (reused as-is; shape-checked against ``features``, and trusted to
+        encode that same matrix — content equality of a lossy encoding is
+        unverifiable).  The pallas backend then fuses Eq. 2 into the
+        B-row gather; the jax backend dequantizes up front.
+      max_buckets: kernel-launch budget for width bucketing (pallas
+        backend): blocks are grouped into at most this many width buckets,
+        one launch each with a static row-DMA width of the bucket max.
       cache: plan cache (default process-wide); blocked plans are stored
         under the same CSR fingerprint as global ones, kind="block".
+      measure_buckets: time candidate bucket partitions on the live
+        backend and pick by measurement (pallas backend only); otherwise
+        the finest <= ``max_buckets`` partition is used analytically.
 
     Like :func:`tune`, the cache is keyed by graph content only: a warm
     cache returns the stored plan *as tuned*, and every tuning knob above
-    (``block_rows``, ``widths``, ``backend``, ...) is ignored on a hit.
-    To re-tune with different knobs, evict first (``cache.clear()`` or a
-    fresh ``PlanCache``).
+    (``block_rows``, ``widths``, ``backend``, ``quant``, ...) is ignored
+    on a hit.  To re-tune with different knobs, evict first
+    (``cache.clear()`` or a fresh ``PlanCache``).
 
     Returns the cached or freshly built :class:`BlockedPlan`.
     """
+    from repro.core.graph import partition_width_buckets
+    from repro.core.quantization import (QuantizedFeatures, as_quantized,
+                                         dequantize)
     from repro.core.sampling import sample_csr_to_block_ell
 
     cache = cache if cache is not None else default_cache()
@@ -164,35 +196,108 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
     if backend is None:
         backend = _default_backends()[-1] if jax.default_backend() == "tpu" \
             else "jax"
+
+    # -- resolve the (features, quantized) pair ---------------------------
+    qf = None
+    if isinstance(features, QuantizedFeatures):
+        qf, features = features, None
+    if isinstance(quant, QuantizedFeatures):
+        qf = quant
+        quant_bits = qf.bits
+    elif quant is not None:
+        quant_bits = int(quant)
+        if qf is not None and qf.bits != quant_bits:
+            # explicit bit-width wins over a mismatched pre-quantized input:
+            # re-encode from its Eq. 2 reconstruction
+            qf = as_quantized(qf, quant_bits)
+    else:
+        quant_bits = qf.bits if qf is not None else None
     if features is None:
-        rng = np.random.default_rng(0)
-        features = np.asarray(
-            rng.normal(size=(csr.num_rows, 64)), np.float32)
+        if qf is not None:
+            # serve the reconstruction the quantized operand encodes
+            features = np.asarray(dequantize(qf))
+        else:
+            if quant_bits is not None:
+                # mirror tune(): quantizing a synthetic stand-in would cache
+                # an operand no real feature set can ever match
+                raise ValueError(
+                    "quantized blocked plans require the real feature "
+                    "matrix (pass `features=`)")
+            rng = np.random.default_rng(0)
+            features = np.asarray(
+                rng.normal(size=(csr.num_rows, 64)), np.float32)
+    if qf is not None and features is not None \
+            and tuple(qf.q.shape) != tuple(np.shape(features)):
+        # the features_fp guard hashes `features`, so a qf of another shape
+        # would silently serve the wrong matrix — refuse loudly instead
+        raise ValueError(
+            f"quantized operand shape {tuple(qf.q.shape)} does not match "
+            f"features shape {tuple(np.shape(features))}")
+    if quant_bits is not None and qf is None:
+        qf = as_quantized(features, quant_bits)
     feat_dim = int(features.shape[1])
 
     block_feats = features_mod.extract_block_features(
         csr, block_rows, feat_dim=feat_dim)
     configs, predicted_us = [], 0.0
     for b, bf in enumerate(block_feats):
-        candidates = [CandidateConfig(s, w, backend)
+        candidates = [CandidateConfig(s, w, backend, quant_bits)
                       for s in strategies for w in widths]
         if include_full:
-            candidates.append(CandidateConfig("full", 0, backend))
+            candidates.append(
+                CandidateConfig("full", 0, backend, quant_bits))
         best = cost_model.rank(bf, candidates, machine, accuracy_weight)[0]
         configs.append((best.config.strategy, best.config.sh_width))
         predicted_us += best.latency_us
         if verbose:
             print(f"  block {b:4d} rows={bf.num_rows} nnz={bf.nnz} "
                   f"max={bf.max_row_nnz} -> {best.config.key()}")
-    # Each per-block estimate carries the per-kernel launch overhead, but
-    # the stitched plan dispatches all blocks from one launch — keep the
-    # overhead once, not num_blocks times.
-    m = machine or MachineModel()
-    predicted_us -= (len(block_feats) - 1) * m.launch_overhead_us
 
     bell = sample_csr_to_block_ell(csr, configs, block_rows)
+
+    # -- width buckets: candidate partitions, measured per bucket ---------
+    cand_parts = []
+    for k in range(1, max(int(max_buckets), 1) + 1):
+        p = partition_width_buckets(bell.widths, k)
+        if p not in cand_parts:
+            cand_parts.append(p)
+    bucket_us: tuple = ()
+    if backend == "pallas" and measure_buckets and len(cand_parts) > 1:
+        b_operand = qf.q if qf is not None else features
+        qmeta = (qf.scale, qf.x_min) if qf is not None else None
+        # selection: one end-to-end timing per candidate partition (each
+        # pays its real dispatch epilogue — like vs like)
+        timed = [
+            (measure.measure_bucket_partition(
+                bell, b_operand, p, quantized_meta=qmeta,
+                warmup=warmup, iters=iters), p)
+            for p in cand_parts
+        ]
+        _, buckets = min(timed, key=lambda t: t[0])
+        # reporting: per-bucket breakdown of the winner
+        bucket_us = tuple(measure.measure_blocked_buckets(
+            bell, b_operand, buckets, quantized_meta=qmeta,
+            warmup=warmup, iters=iters))
+        if verbose:
+            for us, p in timed:
+                print(f"  buckets {[w for w, _ in p]} -> {us:.1f}us")
+    else:
+        buckets = cand_parts[-1]    # finest partition: least DMA over-read
+
+    # Each per-block estimate carries the per-kernel launch overhead, but
+    # the stitched plan dispatches all blocks from one launch per width
+    # bucket — keep the overhead once per bucket, not num_blocks times.
+    m = machine or MachineModel()
+    predicted_us -= (len(block_feats) - max(len(buckets), 1)) \
+        * m.launch_overhead_us
+
     plan = BlockedPlan(bell=bell, backend=backend, fingerprint=fp,
-                       predicted_us=predicted_us)
+                       quantized=qf,
+                       features_fp=(features_fingerprint(features)
+                                    if qf is not None else ""),
+                       buckets=buckets,
+                       predicted_us=predicted_us,
+                       measured_bucket_us=bucket_us)
     if measure_plan:
         plan.measured_spmm_us = measure.time_us(
             plan.run, features, warmup=warmup, iters=iters)
@@ -226,12 +331,9 @@ def _run_cli(args: argparse.Namespace) -> dict:
     cache = PlanCache(args.cache_dir) if args.cache_dir else PlanCache()
 
     if args.granularity == "block":
-        if args.quant:
-            raise SystemExit(
-                "--quant is not supported with --granularity block "
-                "(quantized features are a global-plan feature for now)")
         plan = tune_blocked(csr, ds.features, block_rows=args.block_rows,
-                            widths=widths, cache=cache, verbose=args.verbose)
+                            widths=widths, quant=8 if args.quant else None,
+                            cache=cache, verbose=args.verbose)
         t0 = time.perf_counter()
         tune_blocked(csr, ds.features, block_rows=args.block_rows,
                      cache=cache)
@@ -246,8 +348,13 @@ def _run_cli(args: argparse.Namespace) -> dict:
             "num_blocks": plan.bell.num_blocks,
             "block_configs": dict(Counter(
                 f"{s}-w{w}" for s, w in plan.block_configs())),
+            "width_buckets": [[w, len(ids)] for w, ids in plan.buckets],
+            "quant_bits": None if plan.quantized is None
+            else plan.quantized.bits,
             "live_edges": plan.bell.live_edges(),
             "measured_spmm_us": round(plan.measured_spmm_us, 2),
+            "measured_bucket_us": [round(u, 2)
+                                   for u in plan.measured_bucket_us],
             "predicted_us": round(plan.predicted_us, 2),
             "cache_hit_us": round(hit_us, 2),
         }
@@ -306,7 +413,8 @@ def main(argv: Sequence[str] | None = None) -> None:
     p.add_argument("--block-rows", type=int, default=4096,
                    help="rows per block for --granularity block")
     p.add_argument("--quant", action="store_true",
-                   help="include int8 feature quantization in the grid")
+                   help="include int8 feature quantization in the grid "
+                        "(--granularity block: pre-quantize the plan)")
     p.add_argument("--cache-dir", default=None,
                    help="persist plans to this directory "
                         "(default: in-memory, or $REPRO_PLAN_CACHE_DIR)")

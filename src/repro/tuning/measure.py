@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import CSR, ELL, pad_csr_to_ell
-from repro.core.quantization import QuantizedFeatures, dequantize, quantize
+from repro.core.quantization import (QuantizedFeatures, as_quantized,
+                                     dequantize)
 from repro.tuning.cost_model import CandidateConfig, CostEstimate
 
 
@@ -41,14 +42,22 @@ def time_us(fn: Callable, *args, warmup: int = 1, iters: int = 3, **kw) -> float
 
 def prepare_operand(csr: CSR, cfg: CandidateConfig,
                     features) -> tuple[ELL, QuantizedFeatures | None]:
-    """The cache-miss work: sample (or pad) the ELL, optionally quantize."""
+    """The cache-miss work: sample (or pad) the ELL, optionally quantize.
+
+    For quantizing configs, ``features`` may be a dense matrix or an
+    already-quantized :class:`QuantizedFeatures`: a pre-quantized operand
+    of the config's bit width is reused as-is (no second lossy pass),
+    otherwise it is (re-)quantized per Eq. 1.  Float configs want the
+    dense matrix — :func:`run_operand` dequantizes a stray
+    ``QuantizedFeatures`` on the fly, and ``tune()`` normalizes at entry.
+    """
     from repro.core.aes_spmm import sample
 
     if cfg.strategy == "full":
         ell = pad_csr_to_ell(csr)
     else:
         ell = sample(csr, cfg.sh_width, cfg.strategy, backend=cfg.backend)
-    q = quantize(features, cfg.quant_bits) if cfg.quant_bits is not None \
+    q = as_quantized(features, cfg.quant_bits) if cfg.quant_bits is not None \
         else None
     return ell, q
 
@@ -58,6 +67,8 @@ def run_operand(ell: ELL, features, cfg: CandidateConfig,
     """The per-request work: SpMM over a prepared (cached) operand."""
     from repro.kernels import ref
 
+    if isinstance(features, QuantizedFeatures):
+        features = dequantize(features)   # float paths want the dense form
     if cfg.backend == "pallas":
         from repro.kernels import ops
 
@@ -66,6 +77,53 @@ def run_operand(ell: ELL, features, cfg: CandidateConfig,
         return ops.ell_spmm(ell, features)
     x = dequantize(q) if q is not None else features
     return ref.ell_spmm_rowloop(ell.val, ell.col, x)
+
+
+def measure_blocked_buckets(bell, b, buckets, *, quantized_meta=None,
+                            warmup: int = 1, iters: int = 3,
+                            interpret=None) -> list[float]:
+    """Per-bucket microbenchmarks for a width-bucket partition.
+
+    Times each bucket's Pallas launch *in isolation* (a partial partition
+    passed to ``ops.block_ell_spmm`` runs only that bucket's blocks), so the
+    blocked tuner can compare candidate partitions on measured numbers
+    instead of the analytic model alone — the blocked analogue of
+    :func:`refine`'s top-k measurement.
+
+    Args:
+      bell: the stitched ``BlockELL`` operand.
+      b: the dense operand the launch will gather — f32, or the quantized
+        storage matrix when ``quantized_meta=(scale, x_min)`` is given.
+      buckets: the candidate partition (``core.graph.partition_width_buckets``
+        output).
+
+    Returns one median microsecond timing per bucket, aligned with
+    ``buckets``.
+    """
+    from repro.kernels import ops
+
+    return [
+        time_us(ops.block_ell_spmm, bell, b, buckets=(bucket,),
+                quantized_meta=quantized_meta, interpret=interpret,
+                warmup=warmup, iters=iters)
+        for bucket in buckets
+    ]
+
+
+def measure_bucket_partition(bell, b, buckets, *, quantized_meta=None,
+                             warmup: int = 1, iters: int = 3,
+                             interpret=None) -> float:
+    """One end-to-end timing of a whole candidate partition — the number
+    partitions are *selected* by.  Unlike summing
+    :func:`measure_blocked_buckets`'s isolated launches, this pays each
+    partition's real dispatch epilogue (the single-full-bucket fast path
+    included), so candidates with different bucket counts are compared
+    like with like."""
+    from repro.kernels import ops
+
+    return time_us(ops.block_ell_spmm, bell, b, buckets=buckets,
+                   quantized_meta=quantized_meta, interpret=interpret,
+                   warmup=warmup, iters=iters)
 
 
 @dataclass

@@ -11,9 +11,11 @@ Two kinds of plan share the cache:
   * ``TunedPlan`` — one global (strategy, W, backend, quant) for the whole
     graph, with its sampled ``ELL`` operand;
   * ``BlockedPlan`` — per-row-block (strategy, W) stitched into a
-    mixed-width ``BlockELL`` operand (``granularity="block"``).  The
-    fingerprint semantics are unchanged (content hash of the CSR); the two
-    kinds are stored side by side under ``(fingerprint, kind)``.
+    mixed-width ``BlockELL`` operand (``granularity="block"``), plus the
+    tuned width-bucket table and (optionally) the pre-quantized feature
+    matrix served through the fused-dequant gather.  The fingerprint
+    semantics are unchanged (content hash of the CSR); the two kinds are
+    stored side by side under ``(fingerprint, kind)``.
 
 Two tiers:
 
@@ -24,6 +26,9 @@ Two tiers:
     ``<fingerprint>.npz`` (global) / ``<fingerprint>.block.npz`` (blocked)
     per plan (arrays + JSON-encoded config), surviving process restarts.
     Disk is only consulted on a memory miss and re-warms the memory tier.
+    Bounded by ``$REPRO_PLAN_CACHE_DISK_MAX`` entries (0/unset =
+    unbounded): each save garbage-collects the least-recently-used files
+    by mtime, and disk hits refresh mtime so recency tracks use.
 
 Every on-disk entry is stamped with ``PLAN_SCHEMA_VERSION``; entries from a
 different schema (including pre-versioning ones with no stamp at all) are
@@ -52,11 +57,14 @@ from repro.tuning.cost_model import CandidateConfig
 
 _ENV_DIR = "REPRO_PLAN_CACHE_DIR"
 _ENV_MAX = "REPRO_PLAN_CACHE_MAX"
+_ENV_DISK_MAX = "REPRO_PLAN_CACHE_DISK_MAX"
 
 #: On-disk entry layout version.  Bump on any change to the npz arrays or
 #: meta keys; loaders reject entries whose stamp differs (treated as a
 #: miss, so the tuner rewrites them with the current layout).
-PLAN_SCHEMA_VERSION = 2
+#: v3: blocked entries gained quantized features (q/q_minmax/quant_bits/
+#: features_fp) and the width-bucket table.
+PLAN_SCHEMA_VERSION = 3
 
 _DEFAULT_MAX_PLANS = 64
 
@@ -112,15 +120,23 @@ class BlockedPlan:
 
     The block table (per-block widths, strategies, slot offsets) lives
     inside ``bell``; ``block_configs()`` re-exposes it as (strategy, W)
-    pairs for reporting.  Quantized features are not supported on the
-    blocked path yet (the blocked kernels gather f32 B-rows only).
+    pairs for reporting.  ``buckets`` is the tuned width-bucket partition
+    (``core.graph.partition_width_buckets`` layout) the pallas backend
+    launches — one kernel call per bucket, each with a static row-DMA width
+    of the bucket max.  ``quantized`` (when set) is the pre-quantized
+    feature matrix the plan serves through the fused-dequant gather, guarded
+    by ``features_fp`` exactly like :class:`TunedPlan`.
     """
 
     bell: BlockELL
     backend: str                    # "jax" (rowloop) | "pallas" (block kernel)
     fingerprint: str
+    quantized: Optional[QuantizedFeatures] = None
+    features_fp: str = ""           # content hash of the matrix `quantized` encodes
+    buckets: tuple = ()             # ((bucket_width, (block ids, ...)), ...)
     predicted_us: float = 0.0       # sum of per-block analytic latencies
     measured_spmm_us: float = 0.0
+    measured_bucket_us: tuple = ()  # per-bucket microbench, aligned w/ buckets
 
     kind = "block"
 
@@ -133,14 +149,36 @@ class BlockedPlan:
         return list(zip(self.bell.strategies, self.bell.widths))
 
     def run(self, features):
-        """Steady-state aggregation: block-dispatched SpMM over the cached
-        mixed-width operand."""
+        """Steady-state aggregation: width-bucketed block-dispatched SpMM
+        over the cached mixed-width operand.
+
+        Same offline-quantization semantics as :class:`TunedPlan.run`: the
+        pre-quantized matrix serves only the exact feature matrix the plan
+        was tuned with (content-hash verified); any other dense operand (a
+        hidden-layer activation, say) takes the float path.  A
+        ``QuantizedFeatures`` operand stands for its Eq. 2 reconstruction
+        (the hash a qf-tuned plan stores).
+        """
+        from repro.core.quantization import dequantize
+
+        if isinstance(features, QuantizedFeatures):
+            features = np.asarray(dequantize(features))
+        q = self.quantized
+        if q is not None and features_fingerprint(features) != self.features_fp:
+            q = None
         if self.backend == "pallas":
             from repro.kernels import ops
 
-            return ops.block_ell_spmm(self.bell, features)
+            buckets = self.buckets or None
+            if q is not None:
+                return ops.block_ell_spmm(
+                    self.bell, q.q, quantized_meta=(q.scale, q.x_min),
+                    buckets=buckets)
+            return ops.block_ell_spmm(self.bell, features, buckets=buckets)
         from repro.kernels import ref
 
+        if q is not None:
+            return ref.quant_block_ell_spmm(self.bell, q)
         return ref.block_ell_spmm(self.bell, features)
 
 
@@ -162,19 +200,27 @@ class PlanCache:
     """Bounded in-memory LRU + optional on-disk (fingerprint, kind) ->
     plan store.
 
-    ``max_plans`` bounds the memory tier only (the prepared operands are
-    the big payload); disk entries are never evicted here.  Default comes
-    from ``$REPRO_PLAN_CACHE_MAX`` (fallback 64).
+    ``max_plans`` bounds the memory tier (the prepared operands are the big
+    payload); default from ``$REPRO_PLAN_CACHE_MAX`` (fallback 64).
+    ``max_disk_plans`` bounds the disk tier: on every save, entry files
+    beyond the bound are garbage-collected least-recently-used first
+    (recency = file mtime; disk hits refresh it).  Default from
+    ``$REPRO_PLAN_CACHE_DISK_MAX``; 0/unset means unbounded, matching the
+    pre-bound behavior.
     """
 
     def __init__(self, cache_dir: str | os.PathLike | None = None,
-                 max_plans: int | None = None):
+                 max_plans: int | None = None,
+                 max_disk_plans: int | None = None):
         if cache_dir is None:
             cache_dir = os.environ.get(_ENV_DIR) or None
         self.cache_dir = Path(cache_dir) if cache_dir else None
         if max_plans is None:
             max_plans = int(os.environ.get(_ENV_MAX) or _DEFAULT_MAX_PLANS)
         self.max_plans = max(int(max_plans), 1)
+        if max_disk_plans is None:
+            max_disk_plans = int(os.environ.get(_ENV_DISK_MAX) or 0)
+        self.max_disk_plans = max(int(max_disk_plans), 0)   # 0 == unbounded
         self._mem: OrderedDict[str, AnyPlan] = OrderedDict()
         self.stats = CacheStats()
 
@@ -216,14 +262,18 @@ class PlanCache:
 
     def __contains__(self, fingerprint: str) -> bool:
         """True iff ``get()`` would hit for *some* kind — memory, or a
-        schema-valid disk entry (a stale-schema file is not membership)."""
+        schema-valid disk entry (a stale-schema file is not membership).
+
+        A pure probe: reads only the entry's meta header, deserializes no
+        arrays, and does *not* refresh disk-LRU recency — polling
+        membership never shields an unused entry from
+        ``$REPRO_PLAN_CACHE_DISK_MAX`` eviction."""
         kinds = ("global", "block")
         if any(self._key(fingerprint, k) in self._mem for k in kinds):
             return True
         if self.cache_dir is None:
             return False
-        return any(self._load_disk(fingerprint, k) is not None
-                   for k in kinds)
+        return any(self._peek_disk(fingerprint, k) for k in kinds)
 
     def __len__(self) -> int:
         return len(self._mem)
@@ -257,8 +307,15 @@ class PlanCache:
                 "num_rows": plan.bell.num_rows,
                 "num_cols": plan.bell.num_cols,
                 "strategies": list(plan.bell.strategies),
+                "buckets": [[int(w), [int(i) for i in ids]]
+                            for w, ids in plan.buckets],
+                "features_fp": plan.features_fp,
+                "quant_bits": None if plan.quantized is None
+                else plan.quantized.bits,
                 "predicted_us": plan.predicted_us,
                 "measured_spmm_us": plan.measured_spmm_us,
+                "measured_bucket_us": [float(u)
+                                       for u in plan.measured_bucket_us],
             }
             arrays = {
                 "bell_val": np.asarray(plan.bell.val),
@@ -268,6 +325,11 @@ class PlanCache:
                 "meta": np.frombuffer(
                     json.dumps(meta).encode(), dtype=np.uint8),
             }
+            if plan.quantized is not None:
+                arrays["q"] = np.asarray(plan.quantized.q)
+                arrays["q_minmax"] = np.asarray(
+                    [float(plan.quantized.x_min), float(plan.quantized.x_max)],
+                    np.float32)
         else:
             meta = {
                 "schema": PLAN_SCHEMA_VERSION,
@@ -299,6 +361,28 @@ class PlanCache:
         tmp = path.with_name(path.name + ".tmp.npz")
         np.savez(tmp, **arrays)
         os.replace(tmp, path)
+        self._gc_disk(keep=path)
+
+    def _gc_disk(self, keep: Path | None = None) -> None:
+        """Bound the disk tier: evict entry files LRU-by-mtime past
+        ``max_disk_plans`` (disk hits refresh mtime, so recency tracks use,
+        not just write order).  The just-written entry is always kept."""
+        if not self.max_disk_plans or self.cache_dir is None:
+            return
+        def mtime(p: Path) -> float:
+            try:
+                return p.stat().st_mtime
+            except OSError:
+                return float("-inf")   # racing process unlinked it already
+
+        entries = [p for p in self.cache_dir.glob("*.npz")
+                   if not p.name.endswith(".tmp.npz")]
+        entries.sort(key=lambda p: (p != keep, -mtime(p)))
+        for p in entries[self.max_disk_plans:]:
+            try:
+                p.unlink()
+            except OSError:
+                pass  # racing process already collected it
 
     def _load_disk(self, fingerprint: str,
                    kind: str = "global") -> Optional[AnyPlan]:
@@ -315,6 +399,12 @@ class PlanCache:
                     return None
                 if meta.get("kind", "global") != kind:
                     return None
+                quantized = None
+                if meta.get("quant_bits") is not None:
+                    lo, hi = (float(v) for v in z["q_minmax"])
+                    quantized = QuantizedFeatures(
+                        q=jnp.asarray(z["q"]), x_min=jnp.float32(lo),
+                        x_max=jnp.float32(hi), bits=int(meta["quant_bits"]))
                 if kind == "block":
                     widths = tuple(int(w) for w in z["bell_widths"])
                     bell = BlockELL(
@@ -326,20 +416,25 @@ class PlanCache:
                         block_rows=int(meta["block_rows"]),
                         num_rows=int(meta["num_rows"]),
                         num_cols=int(meta["num_cols"]))
-                    return BlockedPlan(
+                    plan = BlockedPlan(
                         bell=bell, backend=str(meta["backend"]),
                         fingerprint=fingerprint,
+                        quantized=quantized,
+                        features_fp=str(meta.get("features_fp", "")),
+                        buckets=tuple(
+                            (int(w), tuple(int(i) for i in ids))
+                            for w, ids in meta.get("buckets", [])),
                         predicted_us=float(meta.get("predicted_us", 0.0)),
                         measured_spmm_us=float(
-                            meta.get("measured_spmm_us", 0.0)))
+                            meta.get("measured_spmm_us", 0.0)),
+                        measured_bucket_us=tuple(
+                            float(u)
+                            for u in meta.get("measured_bucket_us", [])))
+                    self._touch(path)
+                    return plan
                 ell = ELL(jnp.asarray(z["ell_val"]), jnp.asarray(z["ell_col"]),
                           int(meta["num_cols"]))
-                quantized = None
-                if meta.get("quant_bits") is not None:
-                    lo, hi = (float(v) for v in z["q_minmax"])
-                    quantized = QuantizedFeatures(
-                        q=jnp.asarray(z["q"]), x_min=jnp.float32(lo),
-                        x_max=jnp.float32(hi), bits=int(meta["quant_bits"]))
+            self._touch(path)
             return TunedPlan(
                 config=CandidateConfig.from_dict(meta["config"]),
                 ell=ell, quantized=quantized, fingerprint=fingerprint,
@@ -350,6 +445,30 @@ class PlanCache:
         except (OSError, KeyError, ValueError, TypeError,
                 json.JSONDecodeError, zipfile.BadZipFile):
             return None  # corrupt entry: treat as miss, tuner will rewrite
+
+    def _peek_disk(self, fingerprint: str, kind: str) -> bool:
+        """Header-only validity check: schema + kind from the JSON meta,
+        no array deserialization, no mtime touch (see ``__contains__``)."""
+        path = self._path(fingerprint, kind)
+        if not path.exists():
+            return False
+        try:
+            with np.load(path) as z:
+                meta = json.loads(bytes(z["meta"].tobytes()).decode())
+            return (meta.get("schema") == PLAN_SCHEMA_VERSION
+                    and meta.get("kind", "global") == kind)
+        except (OSError, KeyError, ValueError, TypeError,
+                json.JSONDecodeError, zipfile.BadZipFile):
+            return False
+
+    @staticmethod
+    def _touch(path: Path) -> None:
+        """Refresh a disk entry's mtime on hit — the LRU signal the disk
+        GC (``$REPRO_PLAN_CACHE_DISK_MAX``) evicts by."""
+        try:
+            os.utime(path)
+        except OSError:
+            pass
 
 
 _DEFAULT: PlanCache | None = None

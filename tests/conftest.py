@@ -3,9 +3,13 @@
 Also installs a ``hypothesis`` shim when the real package is absent (it is
 optional — see requirements-dev.txt): property-based tests then collect but
 individually skip, instead of killing collection for the whole suite.
+Environments that must run the property tests for real (CI does) set
+``$REPRO_REQUIRE_HYPOTHESIS`` — a missing hypothesis is then a hard
+collection error, never a silent skip.
 """
 from __future__ import annotations
 
+import os
 import sys
 import types
 
@@ -15,6 +19,11 @@ import pytest
 try:  # pragma: no cover - exercised only where hypothesis is installed
     import hypothesis  # noqa: F401
 except ImportError:
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+        raise RuntimeError(
+            "hypothesis is not installed but $REPRO_REQUIRE_HYPOTHESIS is "
+            "set — property tests would silently skip; install "
+            "requirements-dev.txt") from None
     def _skip_given(*_a, **_k):
         def deco(fn):
             return pytest.mark.skip(

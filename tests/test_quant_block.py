@@ -1,0 +1,420 @@
+"""Quantized BlockELL serving path (ISSUE 3 tentpole).
+
+Property tests (hypothesis — run for real in CI, skip-shimmed locally when
+the package is absent): Eq. 1/2 round-trip error <= scale/2 elementwise;
+the fused dequantize-then-aggregate ``block_ell_spmm`` against the
+dequantize-then-SpMM oracle; width-bucket partitions are permutations of
+the blocks.  Deterministic acceptance tests: quantized
+``aes_spmm(strategy="auto", granularity="block")`` vs the dense float
+reference on every ``test_block_ell.py`` block-size case; the quantized
+``BlockedPlan`` plan-cache round trip (memory + disk, pre-PR-3 entries
+rejected by the schema bump); the bounded disk tier
+(``$REPRO_PLAN_CACHE_DISK_MAX``); the >= 2x feature-bytes reduction; and
+the end-to-end <= 0.3% accuracy-regression gate (paper §4.2.3).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aes_spmm import aes_spmm
+from repro.core.graph import csr_to_dense, partition_width_buckets
+from repro.core.quantization import as_quantized, dequantize, quantize
+from repro.core.sampling import sample_csr_to_block_ell
+from repro.kernels import ops, ref
+from repro.tuning import PLAN_SCHEMA_VERSION, BlockedPlan, PlanCache
+from repro.tuning.autotune import tune, tune_blocked
+
+from conftest import random_csr
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([8, 16]),
+       x_min=st.floats(-1e4, 1e4), span=st.floats(1e-3, 1e4))
+def test_property_roundtrip_error_at_most_half_scale(seed, bits, x_min, span):
+    """quantize -> dequantize reconstructs every element to within scale/2
+    for random (x_min, x_max) ranges and both storage widths."""
+    rng = np.random.default_rng(seed)
+    x = (x_min + rng.uniform(0.0, span, size=(24, 8))).astype(np.float32)
+    qf = quantize(x, bits)
+    err = np.abs(np.asarray(dequantize(qf)) - x)
+    scale = float(qf.scale)
+    # scale/2 plus float32 slack: the Eq. 1 fixed-point math runs in f32,
+    # so a few ulps of x_min/span ride on top of the quantization bound
+    assert err.max() <= scale / 2 + 1e-5 * max(abs(x_min) + span, 1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([8, 16]))
+def test_property_fused_quant_block_spmm_matches_oracle(seed, bits):
+    """The fused dequantize-then-aggregate kernel equals the
+    dequantize-then-SpMM oracle (ref.quant_block_ell_spmm) to a tolerance
+    derived from the quantization scale, on random graphs and random
+    per-block (strategy, width) plans."""
+    rng = np.random.default_rng(seed)
+    g = random_csr(rng, 40, 5.0, skew=0.8)
+    x = (rng.normal(size=(40, 8)) * rng.uniform(0.5, 20.0)).astype(np.float32)
+    qf = quantize(x, bits)
+    pool = [("aes", 4), ("aes", 16), ("sfs", 8), ("afs", 8), ("full", 0)]
+    configs = [pool[i] for i in rng.integers(0, len(pool), 5)]
+    bell = sample_csr_to_block_ell(g, configs, 8)
+    want = np.asarray(ref.quant_block_ell_spmm(bell, qf))
+    got = np.asarray(
+        ops.block_ell_spmm(bell, qf.q, quantized_meta=(qf.scale, qf.x_min)))
+    atol = float(qf.scale) * 0.5 + 1e-5
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=atol)
+
+
+@settings(max_examples=100, deadline=None)
+@given(widths=st.lists(st.integers(1, 300), min_size=1, max_size=40),
+       max_buckets=st.integers(1, 5))
+def test_property_width_buckets_are_a_permutation(widths, max_buckets):
+    """No block dropped or duplicated, each bucket's width is its max
+    member, buckets ascend by width and respect the launch budget."""
+    buckets = partition_width_buckets(widths, max_buckets)
+    ids = [i for _, grp in buckets for i in grp]
+    assert sorted(ids) == list(range(len(widths)))
+    assert len(buckets) <= min(max_buckets, len(set(widths)))
+    for bw, grp in buckets:
+        assert bw == max(widths[i] for i in grp)
+    tops = [bw for bw, _ in buckets]
+    assert tops == sorted(tops)
+
+
+def test_width_buckets_from_random_degree_plans(rng):
+    """The tuner's stitched plans carry bucket tables that partition their
+    blocks, across random skewed degree distributions."""
+    for seed, skew in ((0, 0.4), (1, 0.8), (2, 1.5)):
+        r = np.random.default_rng(seed)
+        g = random_csr(r, 96, 5.0, skew=skew)
+        x = r.normal(size=(96, 8)).astype(np.float32)
+        plan = tune_blocked(g, x, block_rows=16, widths=(4, 8, 32),
+                            cache=PlanCache(), warmup=0, iters=1)
+        ids = [i for _, grp in plan.buckets for i in grp]
+        assert sorted(ids) == list(range(plan.bell.num_blocks))
+        assert len(plan.buckets) <= 3
+
+
+# ---------------------------------------------------------------------------
+# acceptance gate: quantized auto-block vs dense float reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_rows,block_rows", [
+    (48, 1),          # one block per row
+    (300, 256),       # multiple blocks, ragged tail
+    (300, 4096),      # block larger than the graph -> single block
+    (300, 301),       # block_rows > num_rows by one
+])
+def test_quant_auto_block_matches_dense_within_quant_tolerance(
+        num_rows, block_rows):
+    """With every candidate width >= max row nnz the tuned plan covers all
+    edges, so the only deviation from the dense float reference is Eq. 1/2
+    reconstruction error — bounded per output row by
+    ``sum_k |A[r, k]| * scale/2``."""
+    rng = np.random.default_rng(num_rows * 31 + block_rows)
+    g = random_csr(rng, num_rows, 5.0, skew=0.8)
+    wmax = int(np.asarray(g.row_nnz()).max())
+    x = rng.normal(size=(num_rows, 16)).astype(np.float32)
+    want = np.asarray(csr_to_dense(g) @ jnp.asarray(x))
+
+    for backend in ("jax", "pallas"):
+        cache = PlanCache()
+        got = aes_spmm(g, jnp.asarray(x), strategy="auto",
+                       granularity="block", plan_cache=cache,
+                       tune_kwargs=dict(block_rows=block_rows,
+                                        widths=(wmax, 2 * wmax),
+                                        backend=backend, quant=8,
+                                        measure_buckets=False,
+                                        warmup=0, iters=1))
+        plan = cache.plans()[0]
+        assert plan.quantized is not None
+        assert plan.quantized.q.dtype == jnp.uint8
+        scale = float(plan.quantized.scale)
+        bound = (np.abs(np.asarray(csr_to_dense(g))).sum(axis=1, keepdims=True)
+                 * scale / 2 + 1e-4)
+        err = np.abs(np.asarray(got) - want)
+        assert (err <= bound).all(), \
+            f"{backend}: max err {err.max()} vs bound {bound.min()}"
+
+
+def test_quant_blocked_jax_and_pallas_agree(rng):
+    """Backend parity on a truncating quantized mixed-width plan."""
+    g = random_csr(rng, 41, 6.0, skew=0.7)
+    x = rng.normal(size=(41, 20)).astype(np.float32)
+    qf = quantize(x, 8)
+    configs = [("aes", 8), ("sfs", 4), ("afs", 16), ("full", 0), ("aes", 2),
+               ("sfs", 32)]
+    bell = sample_csr_to_block_ell(g, configs, 8)
+    a = ref.quant_block_ell_spmm(bell, qf)
+    b = ops.block_ell_spmm(bell, qf.q, quantized_meta=(qf.scale, qf.x_min))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_as_quantized_reuses_matching_operand(rng):
+    x = rng.normal(size=(12, 6)).astype(np.float32)
+    qf = quantize(x, 8)
+    assert as_quantized(qf, 8) is qf            # no second lossy pass
+    re16 = as_quantized(qf, 16)
+    assert re16.bits == 16 and re16.q.dtype == jnp.uint16
+    assert as_quantized(x, 8).bits == 8
+
+
+def test_quantized_features_accepted_as_the_features_operand(rng):
+    """Regression: every auto entry point tolerates a QuantizedFeatures
+    where a dense matrix is expected — it stands for its Eq. 2
+    reconstruction."""
+    g = random_csr(rng, 36, 4.0)
+    x = rng.normal(size=(36, 8)).astype(np.float32)
+    qf = quantize(x, 8)
+
+    # blocked auto: serves the fused-dequant path
+    cache = PlanCache()
+    out = aes_spmm(g, qf, strategy="auto", granularity="block",
+                   plan_cache=cache,
+                   tune_kwargs=dict(block_rows=16, widths=(64,),
+                                    warmup=0, iters=1))
+    [plan] = cache.plans()
+    assert plan.quantized is not None
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(ref.quant_block_ell_spmm(plan.bell, plan.quantized)),
+        rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(plan.run(qf)), np.asarray(out),
+                               rtol=1e-6, atol=1e-6)
+
+    # global auto: tunes on the dense reconstruction, no crash
+    gplan = tune(g, qf, widths=(8,), budget=1, warmup=0, iters=1,
+                 cache=PlanCache())
+    assert gplan.ell.val.shape[0] == 36
+
+
+def test_explicit_quant_bits_override_mismatched_prequantized(rng):
+    """Regression: tune_blocked(..., quant=8) with a 16-bit pre-quantized
+    input re-encodes to the requested width instead of silently keeping
+    16 bits; a shape mismatch between quant= and features= is refused."""
+    g = random_csr(rng, 30, 4.0)
+    x = rng.normal(size=(30, 8)).astype(np.float32)
+    plan = tune_blocked(g, quantize(x, 16), quant=8, cache=PlanCache(),
+                        block_rows=16, widths=(8,), warmup=0, iters=1)
+    assert plan.quantized.bits == 8
+    assert plan.quantized.q.dtype == jnp.uint8
+
+    wrong_shape = quantize(rng.normal(size=(30, 6)).astype(np.float32), 8)
+    with pytest.raises(ValueError, match="shape"):
+        tune_blocked(g, x, quant=wrong_shape, cache=PlanCache(),
+                     block_rows=16, widths=(8,), warmup=0, iters=1)
+
+
+# ---------------------------------------------------------------------------
+# plan cache: quantized BlockedPlan round trip + schema gate
+# ---------------------------------------------------------------------------
+
+def _quant_blocked(csr, x, cache, **kw):
+    kw.setdefault("block_rows", 16)
+    kw.setdefault("widths", (8, 16))
+    kw.setdefault("quant", 8)
+    kw.setdefault("warmup", 0)
+    kw.setdefault("iters", 1)
+    return tune_blocked(csr, x, cache=cache, **kw)
+
+
+def test_quant_blocked_plan_round_trips_memory_and_disk(rng, tmp_path):
+    g = random_csr(rng, 44, 5.0, skew=0.8)
+    x = rng.normal(size=(44, 8)).astype(np.float32)
+    c1 = PlanCache(cache_dir=tmp_path)
+    plan = _quant_blocked(g, x, c1)
+    assert plan.quantized is not None and plan.features_fp
+    assert plan.buckets
+
+    # memory tier: the same object serves the second lookup
+    assert c1.get(plan.fingerprint, kind="block") is plan
+
+    # disk tier: fresh process simulation — dtype, dequant constants and
+    # bucket table all survive
+    c2 = PlanCache(cache_dir=tmp_path)
+    loaded = c2.get(plan.fingerprint, kind="block")
+    assert isinstance(loaded, BlockedPlan) and c2.stats.disk_hits == 1
+    assert loaded.quantized is not None
+    assert loaded.quantized.bits == plan.quantized.bits
+    assert loaded.quantized.q.dtype == plan.quantized.q.dtype
+    np.testing.assert_array_equal(np.asarray(loaded.quantized.q),
+                                  np.asarray(plan.quantized.q))
+    assert float(loaded.quantized.x_min) == float(plan.quantized.x_min)
+    assert float(loaded.quantized.x_max) == float(plan.quantized.x_max)
+    assert loaded.buckets == plan.buckets
+    assert loaded.features_fp == plan.features_fp
+    np.testing.assert_allclose(np.asarray(loaded.run(x)),
+                               np.asarray(plan.run(x)), rtol=1e-6, atol=1e-6)
+
+
+def test_pre_pr3_blocked_entries_rejected_by_schema_bump(rng, tmp_path):
+    """Regression: a PR-2-era blocked entry (schema 2, no quant fields, no
+    bucket table) must be a miss, never mis-read into a quantless plan."""
+    g = random_csr(rng, 30, 4.0)
+    x = rng.normal(size=(30, 8)).astype(np.float32)
+    c1 = PlanCache(cache_dir=tmp_path)
+    plan = _quant_blocked(g, x, c1)
+    path = c1._path(plan.fingerprint, "block")
+
+    with np.load(path) as z:
+        arrays = dict(z)
+        meta = json.loads(bytes(arrays["meta"].tobytes()).decode())
+    assert meta["schema"] == PLAN_SCHEMA_VERSION == 3
+    # strip everything PR 3 added and stamp the old version
+    for key in ("quant_bits", "features_fp", "buckets",
+                "measured_bucket_us"):
+        meta.pop(key)
+    meta["schema"] = 2
+    arrays.pop("q")
+    arrays.pop("q_minmax")
+    arrays["meta"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+
+    c2 = PlanCache(cache_dir=tmp_path)
+    assert c2.get(plan.fingerprint, kind="block") is None
+    assert c2.stats.misses == 1
+
+
+def test_quantized_blocked_plan_guards_other_features(rng):
+    """The cached uint8 operand serves only the exact matrix it encodes —
+    any other dense operand (hidden-layer activations) goes float."""
+    g = random_csr(rng, 32, 4.0)
+    x1 = rng.normal(size=(32, 8)).astype(np.float32)
+    x2 = rng.normal(size=(32, 8)).astype(np.float32)
+    plan = _quant_blocked(g, x1, PlanCache(), widths=(64,))
+    # x2: float path — exact aggregation of x2, not of dequant(q(x1))
+    np.testing.assert_allclose(np.asarray(plan.run(x2)),
+                               np.asarray(ref.block_ell_spmm(plan.bell, x2)),
+                               rtol=1e-6, atol=1e-6)
+    # x1: quantized path — aggregation of the Eq. 2 reconstruction
+    np.testing.assert_allclose(
+        np.asarray(plan.run(x1)),
+        np.asarray(ref.quant_block_ell_spmm(plan.bell, plan.quantized)),
+        rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# disk-tier GC ($REPRO_PLAN_CACHE_DISK_MAX)
+# ---------------------------------------------------------------------------
+
+def test_disk_cache_gc_lru_by_mtime(rng, tmp_path, monkeypatch):
+    cache = PlanCache(cache_dir=tmp_path, max_disk_plans=2)
+    assert cache.max_disk_plans == 2
+
+    plans = []
+    for i in range(2):
+        g = random_csr(np.random.default_rng(i), 20 + i, 3.0)
+        x = np.random.default_rng(i).normal(size=(20 + i, 4)).astype(np.float32)
+        plans.append(tune(g, x, widths=(4,), budget=1, warmup=0, iters=1,
+                          cache=cache))
+    p0_path = cache._path(plans[0].fingerprint)
+    p1_path = cache._path(plans[1].fingerprint)
+    os.utime(p0_path, (100, 100))     # p0 least recently used
+    os.utime(p1_path, (200, 200))
+
+    g2 = random_csr(np.random.default_rng(9), 25, 3.0)
+    x2 = np.random.default_rng(9).normal(size=(25, 4)).astype(np.float32)
+    p2 = tune(g2, x2, widths=(4,), budget=1, warmup=0, iters=1, cache=cache)
+
+    assert not p0_path.exists()       # evicted (oldest mtime)
+    assert p1_path.exists()
+    assert cache._path(p2.fingerprint).exists()
+
+    # a disk *hit* refreshes recency: touch p1 via a cold cache, then a new
+    # save evicts the untouched entry instead
+    os.utime(p1_path, (100, 100))
+    os.utime(cache._path(p2.fingerprint), (200, 200))
+    cold = PlanCache(cache_dir=tmp_path, max_disk_plans=2)
+    assert cold.get(plans[1].fingerprint) is not None      # refreshes mtime
+    assert p1_path.stat().st_mtime > 200
+
+    g3 = random_csr(np.random.default_rng(11), 26, 3.0)
+    x3 = np.random.default_rng(11).normal(size=(26, 4)).astype(np.float32)
+    tune(g3, x3, widths=(4,), budget=1, warmup=0, iters=1, cache=cold)
+    assert p1_path.exists()                                # recently used
+    assert not cache._path(p2.fingerprint).exists()        # LRU evicted
+
+    # env default + explicit override, matching the memory-tier knob
+    monkeypatch.setenv("REPRO_PLAN_CACHE_DISK_MAX", "5")
+    assert PlanCache(cache_dir=tmp_path).max_disk_plans == 5
+    assert PlanCache(cache_dir=tmp_path,
+                     max_disk_plans=1).max_disk_plans == 1
+    monkeypatch.delenv("REPRO_PLAN_CACHE_DISK_MAX")
+    assert PlanCache(cache_dir=tmp_path).max_disk_plans == 0   # unbounded
+
+
+# ---------------------------------------------------------------------------
+# feature bytes moved: the paper's data-loading win on the blocked path
+# ---------------------------------------------------------------------------
+
+def test_quant_blocked_path_moves_at_least_2x_fewer_feature_bytes(rng):
+    from benchmarks.quant_block_gain import plan_feature_bytes
+
+    g = random_csr(rng, 120, 5.0, skew=0.8)
+    x = rng.normal(size=(120, 16)).astype(np.float32)
+    knobs = dict(block_rows=32, widths=(8, 16), warmup=0, iters=1)
+    fplan = tune_blocked(g, x, cache=PlanCache(), **knobs)
+    qplan = tune_blocked(g, x, quant=8, cache=PlanCache(), **knobs)
+    fb = plan_feature_bytes(fplan, 16)
+    qb = plan_feature_bytes(qplan, 16)
+    assert fb >= 2 * qb, (fb, qb)     # int8 vs f32 is 4x by construction
+
+
+# ---------------------------------------------------------------------------
+# end-to-end accuracy regression (paper <= 0.3% bound) — tier-1
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained_cora():
+    from repro.gnn import make_dataset, train_model
+
+    ds = make_dataset("cora", scale=0.3, seed=2)
+    params, ideal = train_model(ds, "gcn", epochs=100, seed=2)
+    return ds, params, ideal
+
+
+def test_auto_block_quant8_accuracy_within_paper_bound(trained_cora):
+    """gnn.evaluate(strategy="auto", granularity="block") with quant=8 vs
+    float: accuracy delta <= 0.3% (paper §4.2.3's bound, on the synthetic
+    fixture graph)."""
+    from repro.gnn import evaluate
+
+    ds, params, _ = trained_cora
+    tk = dict(block_rows=64, warmup=0, iters=1)
+    base = evaluate(ds, "gcn", params, strategy="auto", granularity="block",
+                    plan_cache=PlanCache(), tune_kwargs=tk)
+    quant = evaluate(ds, "gcn", params, strategy="auto", granularity="block",
+                     quantize_bits=8, plan_cache=PlanCache(), tune_kwargs=tk)
+    assert abs(base - quant) <= 0.003, (base, quant)
+
+
+def test_auto_block_quant_plan_actually_quantized(trained_cora):
+    """The quant=8 evaluate run really serves a uint8 operand (and the
+    float run really does not)."""
+    from repro.gnn import evaluate
+
+    ds, params, _ = trained_cora
+    tk = dict(block_rows=64, warmup=0, iters=1)
+    cq = PlanCache()
+    evaluate(ds, "gcn", params, strategy="auto", granularity="block",
+             quantize_bits=8, plan_cache=cq, tune_kwargs=tk)
+    [qplan] = cq.plans()
+    assert qplan.quantized is not None
+    assert qplan.quantized.bits == 8
+    assert qplan.quantized.q.dtype == jnp.uint8
+
+    cf = PlanCache()
+    evaluate(ds, "gcn", params, strategy="auto", granularity="block",
+             plan_cache=cf, tune_kwargs=tk)
+    [fplan] = cf.plans()
+    assert fplan.quantized is None

@@ -26,13 +26,28 @@ def test_roundtrip_error_bounded_by_one_step(bits):
 
 
 def test_eq1_eq2_literal():
-    """Hand-check Eq. 1 floor semantics and Eq. 2 reconstruction."""
+    """Hand-check Eq. 1 round-to-nearest semantics and Eq. 2 reconstruction
+    (0.5 sits exactly between levels 127 and 128; half-up picks 128)."""
     x = np.array([[0.0, 0.5, 1.0]], np.float32)
     qf = quantize(x, 8)
     assert qf.q.dtype == jnp.uint8
-    np.testing.assert_array_equal(np.asarray(qf.q), [[0, 127, 255]])
+    np.testing.assert_array_equal(np.asarray(qf.q), [[0, 128, 255]])
     xh = np.asarray(dequantize(qf))
-    np.testing.assert_allclose(xh, [[0.0, 127 / 255, 1.0]], atol=1e-6)
+    np.testing.assert_allclose(xh, [[0.0, 128 / 255, 1.0]], atol=1e-6)
+
+
+def test_roundtrip_error_bounded_by_half_step():
+    """Rounding (not flooring) Eq. 1 halves the worst-case error: the
+    elementwise round-trip bound is scale/2 (plus f32 slack — the Eq. 1
+    fixed-point math runs in float32, whose rounding can shift the chosen
+    level by a few ulps of the data range)."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(200, 16)).astype(np.float32) * 5
+    span = float(x.max() - x.min())
+    for bits in (8, 16):
+        qf = quantize(x, bits)
+        err = float(np.abs(np.asarray(dequantize(qf)) - x).max())
+        assert err <= float(qf.scale) / 2 + 1e-6 * span
 
 
 def test_constant_features_safe():
