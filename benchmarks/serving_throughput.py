@@ -1,0 +1,93 @@
+"""Sharded serving throughput: `GNNServer` vs the single-device path.
+
+Rows:
+  * ``serving/<ds>/single``       — warm single-device blocked plan
+    (``tune_blocked`` + ``plan.run``), the baseline every shard count is
+    normalized against;
+  * ``serving/<ds>/loop<S>``      — S-shard engine, per-shard launch loop
+    with double-buffered dispatch;
+  * ``serving/<ds>/batch<S>x<B>`` — B micro-batched float requests in one
+    ``flush()`` vs B sequential ``aggregate()`` calls (the SpMM
+    column-concat win).
+
+Derived fields report tok-equivalent ``rows_s`` (output rows produced per
+second — rows x requests / wall time) and the halo expansion the
+partition pays.  A machine-readable summary lands in
+``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.serving import GNNServer
+from repro.tuning import PlanCache
+from repro.tuning.autotune import tune_blocked
+
+SUMMARY_PATH = Path("BENCH_serving.json")
+
+
+def run(datasets=(("cora", 0.3), ("ogbn-arxiv", 0.01)),
+        shard_counts=(2, 4), batch: int = 4):
+    from repro.gnn.datasets import make_dataset
+
+    summary: dict = {"datasets": {}}
+    for name, scale in datasets:
+        ds = make_dataset(name, scale=scale, seed=1)
+        g, feats = ds.gcn_adj, ds.features
+        rows = g.num_rows
+        entry: dict = {"nodes": rows, "edges": g.nnz}
+
+        plan = tune_blocked(g, feats, cache=PlanCache(),
+                            measure_plan=False)
+        single_us = time_fn(plan.run, feats)
+        single_rows_s = rows / (single_us / 1e6)
+        emit(f"serving/{name}/single", single_us,
+             f"rows_s={single_rows_s:.0f}")
+        entry["single_us"] = single_us
+
+        for S in shard_counts:
+            if S > rows:
+                continue
+            server = GNNServer(g, feats, num_shards=S, cache=PlanCache(),
+                               tune_kwargs=dict(measure_plan=False))
+            us = time_fn(server.aggregate)
+            halo = server.halo_stats()["halo_expansion"]
+            emit(f"serving/{name}/loop{S}", us,
+                 f"rows_s={rows / (us / 1e6):.0f},"
+                 f"vs_single={single_us / max(us, 1e-9):.2f},"
+                 f"halo={halo:.2f}")
+            entry[f"loop{S}_us"] = us
+            entry[f"loop{S}_halo"] = halo
+
+            x = np.asarray(feats)
+
+            def flush_batch():
+                for _ in range(batch):
+                    server.submit(x)
+                return server.flush()
+
+            def sequential():
+                return [server.aggregate(x) for _ in range(batch)]
+
+            us_b = time_fn(flush_batch, warmup=1, iters=3)
+            us_s = time_fn(sequential, warmup=1, iters=3)
+            emit(f"serving/{name}/batch{S}x{batch}", us_b,
+                 f"rows_s={rows * batch / (us_b / 1e6):.0f},"
+                 f"sequential_us={us_s:.0f},"
+                 f"batch_speedup={us_s / max(us_b, 1e-9):.2f}")
+            entry[f"batch{S}x{batch}_us"] = us_b
+            entry[f"batch{S}x{batch}_speedup"] = us_s / max(us_b, 1e-9)
+
+        summary["datasets"][name] = entry
+
+    SUMMARY_PATH.write_text(json.dumps(summary, indent=2))
+    emit("serving/summary", 0.0, f"json={SUMMARY_PATH}")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

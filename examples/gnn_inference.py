@@ -38,4 +38,12 @@ for model in ("gcn", "graphsage"):
     print(f"{'auto':>10} {auto_acc:.4f}  "
           f"(tuned: {plan.config.key()}, cache "
           f"{cache.stats.hits} hits / {cache.stats.misses} miss)")
+
+    # sharded serving parity path (repro.serving): per-shard tuned plans
+    shard_cache = PlanCache()
+    sharded_acc = evaluate(ds, model, params, strategy="auto", shards=2,
+                           plan_cache=shard_cache)
+    print(f"{'auto/2sh':>10} {sharded_acc:.4f}  "
+          f"(per-shard plans, cache {shard_cache.stats.hits} hits / "
+          f"{shard_cache.stats.misses} miss)")
     print()

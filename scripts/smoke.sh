@@ -18,6 +18,10 @@ python -m pytest -x -q
 echo "== tuner: autotune --smoke =="
 python -m repro.tuning.autotune --smoke --json
 
+echo "== serving: sharded engine --smoke (4 host devices) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m repro.serving.server --smoke --json
+
 echo "== benchmarks: 2-config autotune_gain slice =="
 python - <<'EOF'
 from benchmarks import autotune_gain

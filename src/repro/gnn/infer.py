@@ -16,6 +16,7 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
              strategy: str = "aes", backend: str = "jax",
              quantize_bits: Optional[int] = None,
              granularity: str = "graph",
+             shards: Optional[int] = None,
              plan_cache=None, tune_kwargs=None) -> float:
     """Test accuracy under the given kernel configuration.
 
@@ -30,10 +31,41 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
     hidden-layer activations fall back to the float path via the plan's
     feature-hash guard).  ``tune_kwargs`` forwards tuner overrides
     (``block_rows``, ``widths``, ...).
+
+    ``shards=N`` (auto only) routes every aggregation through a sharded
+    ``repro.serving.GNNServer`` over an N-way row partition — per-shard
+    tuned plans, same accuracy semantics (the parity path the serving
+    tests compare against).  ``quantize_bits`` then pre-quantizes each
+    shard's operand; hidden-layer activations take the per-shard float
+    path.
     """
     _, fwd, adj_name = MODELS[model]
     adj = getattr(ds, adj_name)
     feats = ds.features
+
+    if shards is not None:
+        if strategy != "auto":
+            raise ValueError("shards= requires strategy='auto' (per-shard "
+                             "configs are the tuner's to pick)")
+        from repro.serving import GNNServer
+
+        server = GNNServer(adj, feats, num_shards=shards,
+                           quant=quantize_bits, cache=plan_cache,
+                           tune_kwargs=tune_kwargs)
+
+        def agg(csr, h):
+            if csr is not adj:
+                raise ValueError(
+                    "sharded evaluate: the server is partitioned over "
+                    f"{adj_name}; a model aggregating another adjacency "
+                    "needs its own GNNServer")
+            # first layer aggregates the server's own feature matrix —
+            # the cached (possibly quantized) fast path
+            return server.aggregate(None if h is feats else h)
+
+        logits = fwd(params, adj, feats, agg)
+        return float(accuracy(logits, ds.labels,
+                              ds.test_mask.astype(jnp.float32)))
 
     if strategy == "auto":
         from repro.core.aes_spmm import aes_spmm

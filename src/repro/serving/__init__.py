@@ -1,0 +1,31 @@
+"""``repro.serving`` — sharded, batched GNN inference on mesh-aware plans.
+
+Turns the single-call ``aes_spmm``/``gnn.evaluate`` path into a
+multi-device serving engine:
+
+  * ``partition`` — 1-D row partition of the CSR adjacency into
+    per-device shards with a local/halo column split and a halo
+    feature-gather index per shard;
+  * ``plans`` — per-shard tuning (``repro.tuning.tune_blocked`` per
+    shard) cached under the extended key ``(fingerprint, kind,
+    shard_meta)`` with ``shard_meta = (mesh_shape, shard_idx,
+    num_shards)``, so restarting the same serving topology is a pure
+    plan-cache hit;
+  * ``engine`` — :class:`GNNServer` with ``submit()``/``flush()``
+    micro-batching, per-shard width-bucketed launches (loop mode with
+    double-buffered operand dispatch, or one ``jax.shard_map`` program),
+    and uint8 feature dispatch when the plans are quantized;
+  * ``server`` — the CLI: ``python -m repro.serving.server --smoke``.
+
+See ``docs/architecture.md`` ("Sharded serving") for the data flow.
+"""
+from repro.serving.engine import GNNServer
+from repro.serving.partition import (CSRShard, concat_shard_outputs,
+                                     halo_stats, partition_csr, row_bounds)
+from repro.serving.plans import plan_shard, plan_shards, shard_meta_for
+
+__all__ = [
+    "CSRShard", "GNNServer", "concat_shard_outputs", "halo_stats",
+    "partition_csr", "plan_shard", "plan_shards", "row_bounds",
+    "shard_meta_for",
+]

@@ -1,0 +1,168 @@
+"""1-D row partition of a CSR adjacency into per-device serving shards.
+
+The sharded engine (``repro.serving.engine``) row-partitions the graph:
+shard ``s`` owns a contiguous row range and computes exactly those output
+rows of ``C = A @ B``.  Row partitioning keeps every edge's *accumulation*
+shard-local (no cross-device reductions — each output row is produced by
+one shard), at the price of a *halo*: columns of shard ``s``'s rows that
+reference nodes owned by other shards need those nodes' feature rows
+gathered in before the SpMM.
+
+Each :class:`CSRShard` therefore carries
+
+  * a remapped local CSR whose column space is ``[local rows | halo
+    nodes]`` — local columns first (shifted to shard-relative ids), then
+    the shard's sorted unique halo node ids;
+  * ``gather_index`` — the global feature rows, local then halo, that
+    build the shard's dense operand ``B_s = B[gather_index]``.  Per-row
+    edge order is preserved by the remap, so each output row accumulates
+    in exactly the order the unsharded kernel would use (the parity tests
+    exploit this for bit-exact comparisons).
+
+The split is balanced by *rows* (the first ``num_rows % num_shards``
+shards take one extra row), so a graph whose rows don't divide the shard
+count still partitions — per-edge balance is the tuner's problem (each
+shard gets its own plan, see ``repro.serving.plans``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CSR
+
+
+def row_bounds(num_rows: int, num_shards: int) -> np.ndarray:
+    """Balanced contiguous row boundaries: int64[num_shards + 1].
+
+    ``bounds[s]:bounds[s+1]`` is shard ``s``'s row range; the first
+    ``num_rows % num_shards`` shards own one extra row.
+    """
+    num_rows, num_shards = int(num_rows), int(num_shards)
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if num_shards > num_rows:
+        raise ValueError(
+            f"cannot split {num_rows} rows into {num_shards} shards "
+            "(empty shards would serve no rows)")
+    base, rem = divmod(num_rows, num_shards)
+    sizes = np.full(num_shards, base, np.int64)
+    sizes[:rem] += 1
+    bounds = np.zeros(num_shards + 1, np.int64)
+    np.cumsum(sizes, out=bounds[1:])
+    return bounds
+
+
+@dataclass(frozen=True)
+class CSRShard:
+    """One shard of a row-partitioned adjacency.
+
+    ``csr`` is the shard's rows with columns remapped into the compact
+    ``[0, num_local + num_halo)`` space; ``gather_index`` maps that space
+    back to global node ids (``gather_index[:num_local]`` is
+    ``arange(row_start, row_stop)``, the rest are the sorted halo ids).
+    """
+
+    csr: CSR
+    shard_idx: int
+    num_shards: int
+    row_start: int
+    row_stop: int
+    halo_ids: np.ndarray      # sorted unique global ids owned elsewhere
+    gather_index: np.ndarray  # int64[num_local + num_halo] global rows
+
+    @property
+    def num_rows(self) -> int:
+        """Output rows this shard produces (== local nodes)."""
+        return self.row_stop - self.row_start
+
+    @property
+    def num_local(self) -> int:
+        return self.row_stop - self.row_start
+
+    @property
+    def num_halo(self) -> int:
+        return len(self.halo_ids)
+
+    def gather(self, features):
+        """The shard's dense operand: ``B[gather_index]`` (local rows
+        first, then halo rows) — shape ``[num_local + num_halo, feat]``."""
+        return jnp.asarray(features)[jnp.asarray(self.gather_index)]
+
+
+def partition_csr(csr: CSR, num_shards: int) -> list[CSRShard]:
+    """Split a CSR into ``num_shards`` row shards with local/halo columns.
+
+    Args:
+      csr: the adjacency (square in the GNN case; only rows are split, the
+        column space is the full node set before remapping).
+      num_shards: shard count; must not exceed ``csr.num_rows``.
+
+    Returns one :class:`CSRShard` per shard, ascending by row range.
+    Concatenating the shards' SpMM outputs in order reconstructs the
+    unsharded output exactly (``tests/test_serving.py`` asserts bit-level
+    parity on integer-valued inputs).
+    """
+    rp = np.asarray(csr.row_ptr).astype(np.int64)
+    ci = np.asarray(csr.col_ind).astype(np.int64)
+    v = np.asarray(csr.val)
+    bounds = row_bounds(csr.num_rows, num_shards)
+
+    shards = []
+    for s in range(int(num_shards)):
+        r0, r1 = int(bounds[s]), int(bounds[s + 1])
+        lo, hi = int(rp[r0]), int(rp[r1])
+        cols = ci[lo:hi]
+        local = (cols >= r0) & (cols < r1)
+        halo_ids = np.unique(cols[~local])
+        n_local = r1 - r0
+        # np.where evaluates both branches: searchsorted of a *local* col
+        # returns garbage but is masked out.
+        remapped = np.where(local, cols - r0,
+                            n_local + np.searchsorted(halo_ids, cols))
+        shard_csr = CSR(
+            row_ptr=jnp.asarray((rp[r0:r1 + 1] - lo).astype(np.int32)),
+            col_ind=jnp.asarray(remapped.astype(np.int32)),
+            val=jnp.asarray(v[lo:hi]),
+            num_cols=n_local + len(halo_ids))
+        gather = np.concatenate([np.arange(r0, r1, dtype=np.int64),
+                                 halo_ids])
+        shards.append(CSRShard(
+            csr=shard_csr, shard_idx=s, num_shards=int(num_shards),
+            row_start=r0, row_stop=r1, halo_ids=halo_ids,
+            gather_index=gather))
+    return shards
+
+
+def halo_stats(shards: list[CSRShard]) -> dict:
+    """Partition-quality summary: how much feature traffic the halo adds."""
+    local = sum(s.num_local for s in shards)
+    halo = sum(s.num_halo for s in shards)
+    return {
+        "num_shards": len(shards),
+        "rows_per_shard": [s.num_rows for s in shards],
+        "halo_per_shard": [s.num_halo for s in shards],
+        "halo_rows_total": halo,
+        "halo_expansion": (local + halo) / max(local, 1),
+    }
+
+
+def concat_shard_outputs(outputs, device=None) -> jnp.ndarray:
+    """Stitch per-shard SpMM outputs (ascending shard order) back into the
+    global row order — a plain concat, since shards own contiguous ranges.
+
+    Outputs committed to different devices are brought together with
+    async device-to-device transfers (default target: the first output's
+    device) — no host round trip on the serving hot path.
+    """
+    import jax
+
+    outputs = [jnp.asarray(o) for o in outputs]
+    if device is None:
+        devs = getattr(outputs[0], "devices", None)
+        device = next(iter(devs())) if callable(devs) else None
+    if device is not None:
+        outputs = [jax.device_put(o, device) for o in outputs]
+    return jnp.concatenate(outputs, axis=0)

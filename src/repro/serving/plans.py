@@ -1,0 +1,96 @@
+"""Per-shard plan building: one tuned ``BlockedPlan`` per mesh shard.
+
+The single-device tuner adapts (strategy, W) to one device's graph; a mesh
+stretching one global plan over every shard would hand the dense-head
+shard and the sparse-tail shard the same layout.  Here each shard is tuned
+*independently* on its own remapped CSR and gathered features — reusing
+``repro.tuning.tune_blocked`` wholesale (per-block ranking, width buckets,
+optional uint8 quantization) — and cached under the extended key
+``(fingerprint, kind="block", shard_meta)`` with ``shard_meta =
+(mesh_shape, shard_idx, num_shards)``.
+
+With a disk-backed cache (``$REPRO_PLAN_CACHE_DIR``) every host/device
+restart of the same serving topology is a pure cache hit: no re-ranking,
+no re-sampling, no re-quantization — the acceptance gate
+``tests/test_serving.py::test_warm_cache_skips_all_tuning`` asserts it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.serving.partition import CSRShard
+from repro.tuning.plan_cache import (BlockedPlan, PlanCache,
+                                     normalize_shard_meta)
+
+
+def shard_meta_for(shard: CSRShard,
+                   mesh_shape: Sequence[int] | None = None) -> tuple:
+    """The cache-key extension for one shard: ``(mesh_shape, shard_idx,
+    num_shards)``.  Default mesh shape is the 1-D ``(num_shards,)`` row
+    mesh the engine executes on."""
+    if mesh_shape is None:
+        mesh_shape = (shard.num_shards,)
+    return normalize_shard_meta(
+        (tuple(mesh_shape), shard.shard_idx, shard.num_shards))
+
+
+def plan_shard(shard: CSRShard, features, *,
+               mesh_shape: Sequence[int] | None = None,
+               quant: Optional[int] = None,
+               cache: PlanCache | None = None,
+               tune_kwargs: dict | None = None) -> BlockedPlan:
+    """Tune (or fetch) the ``BlockedPlan`` for one shard.
+
+    Args:
+      shard: the partition entry (``partition.partition_csr``).
+      features: the *global* dense feature matrix; the shard's operand is
+        gathered here (``shard.gather``) so the plan's quantized matrix
+        and ``features_fp`` guard cover exactly what serving will feed it.
+      mesh_shape: mesh the plan is keyed to (default ``(num_shards,)``).
+      quant: pre-quantize the shard operand to this bit width (8/16); the
+        plan then serves the fused-dequant path.
+      cache / tune_kwargs: forwarded to ``tune_blocked``.
+
+    Returns the shard's plan, with ``plan.shard_meta`` set.  Unlike a raw
+    ``tune_blocked`` call — whose warm-cache hits return the stored plan
+    *as tuned*, ignoring the knobs — this guarantees the plan serves the
+    *current* request: a cached entry tuned with a different ``quant``
+    (float plans in a cache warmed quantized, or the reverse, which would
+    silently serve lossy outputs), or whose quantized operand encodes a
+    different feature matrix (a stale disk entry from before a feature
+    update), is re-tuned (``refresh=True``) and overwritten, never
+    served.
+    """
+    from repro.tuning.autotune import tune_blocked
+    from repro.tuning.plan_cache import features_fingerprint
+
+    kw = dict(tune_kwargs or {})
+    if quant is not None:
+        kw.setdefault("quant", quant)
+    want = kw.get("quant")
+    want_bits = getattr(want, "bits", None) if want is not None else None
+    if want is not None and want_bits is None:
+        want_bits = int(want)
+    shard_feats = shard.gather(features) if features is not None else None
+    sm = shard_meta_for(shard, mesh_shape)
+    plan = tune_blocked(shard.csr, shard_feats, cache=cache, shard_meta=sm,
+                        **kw)
+    got_bits = plan.quantized.bits if plan.quantized is not None else None
+    stale = got_bits != want_bits
+    if not stale and want_bits is not None and shard_feats is not None:
+        stale = plan.features_fp != features_fingerprint(shard_feats)
+    if stale:
+        plan = tune_blocked(shard.csr, shard_feats, cache=cache,
+                            shard_meta=sm, refresh=True, **kw)
+    return plan
+
+
+def plan_shards(shards: Sequence[CSRShard], features, *,
+                mesh_shape: Sequence[int] | None = None,
+                quant: Optional[int] = None,
+                cache: PlanCache | None = None,
+                tune_kwargs: dict | None = None) -> list[BlockedPlan]:
+    """Per-shard plans for a whole partition (see :func:`plan_shard`)."""
+    return [plan_shard(s, features, mesh_shape=mesh_shape, quant=quant,
+                       cache=cache, tune_kwargs=tune_kwargs)
+            for s in shards]

@@ -59,6 +59,7 @@ from repro.tuning.features import (GraphFeatures, extract_block_features,
                                    fingerprint)
 from repro.tuning.plan_cache import (PLAN_SCHEMA_VERSION, BlockedPlan,
                                      PlanCache, TunedPlan, default_cache,
+                                     normalize_shard_meta,
                                      reset_default_cache)
 
 
@@ -80,6 +81,7 @@ __all__ = [
     "BlockedPlan", "CandidateConfig", "CostEstimate", "GraphFeatures",
     "MachineModel", "PLAN_SCHEMA_VERSION", "PlanCache", "TunedPlan",
     "default_cache", "default_grid", "extract_block_features",
-    "extract_features", "features_from_row_nnz", "fingerprint", "predict",
-    "rank", "reset_default_cache", "tune", "tune_blocked",
+    "extract_features", "features_from_row_nnz", "fingerprint",
+    "normalize_shard_meta", "predict", "rank", "reset_default_cache",
+    "tune", "tune_blocked",
 ]

@@ -37,7 +37,8 @@ from repro.tuning import cost_model, features as features_mod, measure
 from repro.tuning.cost_model import (CandidateConfig, DEFAULT_WIDTHS,
                                      MachineModel, default_grid)
 from repro.tuning.plan_cache import (BlockedPlan, PlanCache, TunedPlan,
-                                     default_cache, features_fingerprint)
+                                     default_cache, features_fingerprint,
+                                     normalize_shard_meta)
 
 
 def _default_backends() -> tuple[str, ...]:
@@ -55,6 +56,7 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
          accuracy_weight: float = 5.0,
          cache: PlanCache | None = None,
          warmup: int = 1, iters: int = 3,
+         shard_meta=None, refresh: bool = False,
          verbose: bool = False) -> TunedPlan:
     """Pick (strategy, W, backend, quant) for ``csr`` and cache the plan.
 
@@ -62,10 +64,17 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
     always ranked analytically first).  ``features`` is the dense operand the
     SpMM will multiply; when omitted a synthetic f32[rows, 64] stands in
     (timings stay representative because cost scales linearly in feat_dim).
+    ``shard_meta=(mesh_shape, shard_idx, num_shards)`` marks the plan as a
+    per-shard serving plan — it is cached under the extended key
+    ``(fingerprint, kind, shard_meta)`` so it never collides with the
+    whole-graph plan of the same CSR content (``repro.serving``).
+    ``refresh=True`` forces a re-tune: the cache read is skipped but the
+    fresh plan still overwrites the entry.
     """
     cache = cache if cache is not None else default_cache()
+    shard_meta = normalize_shard_meta(shard_meta)
     fp = features_mod.fingerprint(csr)
-    plan = cache.get(fp)
+    plan = None if refresh else cache.get(fp, shard_meta=shard_meta)
     if plan is not None:
         return plan
 
@@ -109,7 +118,8 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
         features_fp=(features_fingerprint(features)
                      if quantized is not None else ""),
         predicted_us=best.estimate.latency_us if best.estimate else 0.0,
-        measured_spmm_us=best.spmm_us, measured_sample_us=best.sample_us)
+        measured_spmm_us=best.spmm_us, measured_sample_us=best.sample_us,
+        shard_meta=shard_meta)
     cache.put(plan)
     return plan
 
@@ -127,6 +137,7 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                  measure_plan: bool = True,
                  measure_buckets: bool = True,
                  warmup: int = 1, iters: int = 3,
+                 shard_meta=None, refresh: bool = False,
                  verbose: bool = False) -> BlockedPlan:
     """Pick (strategy, W) *per fixed-size row block* and cache the stitched
     mixed-width plan.
@@ -170,6 +181,10 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
         one launch each with a static row-DMA width of the bucket max.
       cache: plan cache (default process-wide); blocked plans are stored
         under the same CSR fingerprint as global ones, kind="block".
+      shard_meta: ``(mesh_shape, shard_idx, num_shards)`` for per-shard
+        serving plans (``repro.serving``) — extends the cache key so a
+        shard's plan coexists with the whole-graph plan of the same CSR
+        content and survives host/device restarts via the disk tier.
       measure_buckets: time candidate bucket partitions on the live
         backend and pick by measurement (pallas backend only); otherwise
         the finest <= ``max_buckets`` partition is used analytically.
@@ -177,8 +192,9 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
     Like :func:`tune`, the cache is keyed by graph content only: a warm
     cache returns the stored plan *as tuned*, and every tuning knob above
     (``block_rows``, ``widths``, ``backend``, ``quant``, ...) is ignored
-    on a hit.  To re-tune with different knobs, evict first
-    (``cache.clear()`` or a fresh ``PlanCache``).
+    on a hit.  To re-tune with different knobs, pass ``refresh=True``
+    (skips the cache read; the fresh plan still overwrites the entry) or
+    evict first (``cache.clear()`` / a fresh ``PlanCache``).
 
     Returns the cached or freshly built :class:`BlockedPlan`.
     """
@@ -188,8 +204,10 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
     from repro.core.sampling import sample_csr_to_block_ell
 
     cache = cache if cache is not None else default_cache()
+    shard_meta = normalize_shard_meta(shard_meta)
     fp = features_mod.fingerprint(csr)
-    plan = cache.get(fp, kind="block")
+    plan = None if refresh \
+        else cache.get(fp, kind="block", shard_meta=shard_meta)
     if plan is not None:
         return plan
 
@@ -297,7 +315,8 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                                     if qf is not None else ""),
                        buckets=buckets,
                        predicted_us=predicted_us,
-                       measured_bucket_us=bucket_us)
+                       measured_bucket_us=bucket_us,
+                       shard_meta=shard_meta)
     if measure_plan:
         plan.measured_spmm_us = measure.time_us(
             plan.run, features, warmup=warmup, iters=iters)
@@ -329,6 +348,40 @@ def _run_cli(args: argparse.Namespace) -> dict:
     ds = make_dataset(ds_name, scale=scale, seed=args.seed)
     csr = ds.gcn_adj
     cache = PlanCache(args.cache_dir) if args.cache_dir else PlanCache()
+
+    if args.shards and args.shards > 1:
+        # Per-shard serving plans (repro.serving): tune one BlockedPlan per
+        # row shard, keyed by (fingerprint, "block", shard_meta), and prove
+        # the second pass is a pure cache hit.
+        from repro.serving import partition_csr, plan_shards
+
+        shards = partition_csr(csr, args.shards)
+        kw = dict(block_rows=args.block_rows, widths=widths,
+                  quant=8 if args.quant else None)
+        plans = plan_shards(shards, ds.features, cache=cache,
+                            tune_kwargs=dict(kw, verbose=args.verbose))
+        t0 = time.perf_counter()
+        plan_shards(shards, ds.features, cache=cache, tune_kwargs=kw)
+        hit_us = (time.perf_counter() - t0) * 1e6
+        report = {
+            "dataset": ds_name,
+            "nodes": csr.num_rows,
+            "edges": csr.nnz,
+            "shards": args.shards,
+            "per_shard": [
+                {"shard": s.shard_idx, "rows": s.num_rows,
+                 "halo": s.num_halo,
+                 "widths": list(p.bell.widths),
+                 "measured_spmm_us": round(p.measured_spmm_us, 2)}
+                for s, p in zip(shards, plans)],
+            "cache_hit_us": round(hit_us, 2),
+            "cache_stats": {"hits": cache.stats.hits,
+                            "misses": cache.stats.misses},
+        }
+        print(json.dumps(report, indent=None if args.json else 2))
+        assert cache.stats.hits >= args.shards, \
+            "sharded plan cache did not hit on the second pass"
+        return report
 
     if args.granularity == "block":
         plan = tune_blocked(csr, ds.features, block_rows=args.block_rows,
@@ -412,6 +465,9 @@ def main(argv: Sequence[str] | None = None) -> None:
                    help="one global config, or per-row-block mixed widths")
     p.add_argument("--block-rows", type=int, default=4096,
                    help="rows per block for --granularity block")
+    p.add_argument("--shards", type=int, default=0,
+                   help="tune per-shard serving plans over an N-way row "
+                        "partition (repro.serving; implies blocked plans)")
     p.add_argument("--quant", action="store_true",
                    help="include int8 feature quantization in the grid "
                         "(--granularity block: pre-quantize the plan)")

@@ -17,6 +17,12 @@ Two kinds of plan share the cache:
     semantics are unchanged (content hash of the CSR); the two kinds are
     stored side by side under ``(fingerprint, kind)``.
 
+Either kind may additionally be a *per-shard* plan (``repro.serving``): the
+key is then ``(fingerprint, kind, shard_meta)`` where ``shard_meta =
+(mesh_shape, shard_idx, num_shards)`` — a shard's plan never collides with
+the whole-graph plan of the same CSR content, and a mesh reshape retunes
+rather than serving stale shard layouts.
+
 Two tiers:
 
   * in-memory LRU — always on; hit == dict lookup; bounded to
@@ -64,9 +70,36 @@ _ENV_DISK_MAX = "REPRO_PLAN_CACHE_DISK_MAX"
 #: miss, so the tuner rewrites them with the current layout).
 #: v3: blocked entries gained quantized features (q/q_minmax/quant_bits/
 #: features_fp) and the width-bucket table.
-PLAN_SCHEMA_VERSION = 3
+#: v4: entries gained ``shard_meta`` (mesh shape, shard index, num shards)
+#: so per-shard serving plans cannot be confused with whole-graph ones —
+#: v3 entries carry no shard discriminator and are rejected.
+PLAN_SCHEMA_VERSION = 4
 
 _DEFAULT_MAX_PLANS = 64
+
+
+def normalize_shard_meta(shard_meta):
+    """Canonical ``(mesh_shape, shard_idx, num_shards)`` tuple (or None).
+
+    Accepts lists/np ints from JSON round-trips; validates the index is in
+    range and the mesh has capacity for the shard count so a malformed key
+    fails at construction, not as a silent cache split.
+    """
+    if shard_meta is None:
+        return None
+    mesh_shape, shard_idx, num_shards = shard_meta
+    mesh_shape = tuple(int(d) for d in mesh_shape)
+    shard_idx, num_shards = int(shard_idx), int(num_shards)
+    if num_shards < 1 or not 0 <= shard_idx < num_shards \
+            or int(np.prod(mesh_shape or (0,))) < num_shards:
+        raise ValueError(f"invalid shard_meta {shard_meta!r}")
+    return (mesh_shape, shard_idx, num_shards)
+
+
+def _shard_tag(shard_meta) -> str:
+    """Filesystem-/key-safe encoding of a normalized shard_meta."""
+    mesh_shape, shard_idx, num_shards = shard_meta
+    return f"m{'x'.join(str(d) for d in mesh_shape)}.s{shard_idx}of{num_shards}"
 
 
 def features_fingerprint(features) -> str:
@@ -94,6 +127,7 @@ class TunedPlan:
     predicted_us: float = 0.0
     measured_spmm_us: float = 0.0
     measured_sample_us: float = 0.0
+    shard_meta: Optional[tuple] = None  # (mesh_shape, shard_idx, num_shards)
 
     kind = "global"
 
@@ -137,6 +171,7 @@ class BlockedPlan:
     predicted_us: float = 0.0       # sum of per-block analytic latencies
     measured_spmm_us: float = 0.0
     measured_bucket_us: tuple = ()  # per-bucket microbench, aligned w/ buckets
+    shard_meta: Optional[tuple] = None  # (mesh_shape, shard_idx, num_shards)
 
     kind = "block"
 
@@ -148,7 +183,7 @@ class BlockedPlan:
         """Per-block (strategy, width) — the stitched tuning decisions."""
         return list(zip(self.bell.strategies, self.bell.widths))
 
-    def run(self, features):
+    def run(self, features, *, assume_tuned: bool = False):
         """Steady-state aggregation: width-bucketed block-dispatched SpMM
         over the cached mixed-width operand.
 
@@ -158,14 +193,24 @@ class BlockedPlan:
         hidden-layer activation, say) takes the float path.  A
         ``QuantizedFeatures`` operand stands for its Eq. 2 reconstruction
         (the hash a qf-tuned plan stores).
+
+        ``assume_tuned=True`` asserts ``features`` *is* the tuned matrix
+        and skips the per-call content hash — serving engines that verify
+        the match once at startup (``repro.serving``) use it to keep the
+        request hot path free of host-side hashing; a quantized plan may
+        then be run with ``features=None`` (the cached operand serves).
         """
         from repro.core.quantization import dequantize
 
         if isinstance(features, QuantizedFeatures):
             features = np.asarray(dequantize(features))
         q = self.quantized
-        if q is not None and features_fingerprint(features) != self.features_fp:
+        if q is not None and not assume_tuned \
+                and features_fingerprint(features) != self.features_fp:
             q = None
+        if q is None and features is None:
+            raise ValueError("features=None requires a quantized plan and "
+                             "assume_tuned=True")
         if self.backend == "pallas":
             from repro.kernels import ops
 
@@ -225,8 +270,10 @@ class PlanCache:
         self.stats = CacheStats()
 
     @staticmethod
-    def _key(fingerprint: str, kind: str) -> str:
-        return f"{fingerprint}|{kind}"
+    def _key(fingerprint: str, kind: str, shard_meta=None) -> str:
+        shard_meta = normalize_shard_meta(shard_meta)
+        tag = "" if shard_meta is None else f"|{_shard_tag(shard_meta)}"
+        return f"{fingerprint}|{kind}{tag}"
 
     def _insert(self, key: str, plan: AnyPlan) -> None:
         self._mem[key] = plan
@@ -236,17 +283,21 @@ class PlanCache:
 
     # -- lookup ----------------------------------------------------------
 
-    def get(self, fingerprint: str, kind: str = "global") -> Optional[AnyPlan]:
+    def get(self, fingerprint: str, kind: str = "global",
+            shard_meta=None) -> Optional[AnyPlan]:
         """Fetch the ``kind`` ("global" | "block") plan for a fingerprint;
-        None on a miss.  Hits refresh LRU recency."""
-        key = self._key(fingerprint, kind)
+        None on a miss.  ``shard_meta`` selects a per-shard serving plan
+        (``(mesh_shape, shard_idx, num_shards)``); None means the
+        whole-graph plan.  Hits refresh LRU recency."""
+        shard_meta = normalize_shard_meta(shard_meta)
+        key = self._key(fingerprint, kind, shard_meta)
         plan = self._mem.get(key)
         if plan is not None:
             self._mem.move_to_end(key)
             self.stats.hits += 1
             return plan
         if self.cache_dir is not None:
-            plan = self._load_disk(fingerprint, kind)
+            plan = self._load_disk(fingerprint, kind, shard_meta)
             if plan is not None:
                 self._insert(key, plan)
                 self.stats.hits += 1
@@ -256,24 +307,31 @@ class PlanCache:
         return None
 
     def put(self, plan: AnyPlan) -> None:
-        self._insert(self._key(plan.fingerprint, plan.kind), plan)
+        self._insert(
+            self._key(plan.fingerprint, plan.kind, plan.shard_meta), plan)
         if self.cache_dir is not None:
             self._save_disk(plan)
 
     def __contains__(self, fingerprint: str) -> bool:
-        """True iff ``get()`` would hit for *some* kind — memory, or a
-        schema-valid disk entry (a stale-schema file is not membership).
+        """True iff ``get()`` would hit for *some* (kind, shard_meta) —
+        memory, or a schema-valid disk entry (a stale-schema file is not
+        membership).
 
-        A pure probe: reads only the entry's meta header, deserializes no
+        A pure probe: reads only each entry's meta header, deserializes no
         arrays, and does *not* refresh disk-LRU recency — polling
         membership never shields an unused entry from
         ``$REPRO_PLAN_CACHE_DISK_MAX`` eviction."""
-        kinds = ("global", "block")
-        if any(self._key(fingerprint, k) in self._mem for k in kinds):
+        prefix = f"{fingerprint}|"
+        if any(k.startswith(prefix) for k in self._mem):
             return True
-        if self.cache_dir is None:
+        if self.cache_dir is None or not self.cache_dir.exists():
             return False
-        return any(self._peek_disk(fingerprint, k) for k in kinds)
+        # every entry file of this fingerprint (shard-tagged or not):
+        # <fp>[.<shard_tag>][.block].npz — fingerprints are fixed-length
+        # hex, so the prefix glob cannot catch another fingerprint
+        return any(self._peek_file(p, fingerprint)
+                   for p in self.cache_dir.glob(f"{fingerprint}*.npz")
+                   if not p.name.endswith(".tmp.npz"))
 
     def __len__(self) -> int:
         return len(self._mem)
@@ -291,17 +349,28 @@ class PlanCache:
 
     # -- disk tier -------------------------------------------------------
 
-    def _path(self, fingerprint: str, kind: str = "global") -> Path:
+    def _path(self, fingerprint: str, kind: str = "global",
+              shard_meta=None) -> Path:
+        shard = "" if shard_meta is None else f".{_shard_tag(shard_meta)}"
         suffix = ".npz" if kind == "global" else ".block.npz"
-        return self.cache_dir / f"{fingerprint}{suffix}"
+        return self.cache_dir / f"{fingerprint}{shard}{suffix}"
+
+    @staticmethod
+    def _shard_meta_json(shard_meta):
+        if shard_meta is None:
+            return None
+        mesh_shape, shard_idx, num_shards = shard_meta
+        return [list(mesh_shape), shard_idx, num_shards]
 
     def _save_disk(self, plan: AnyPlan) -> None:
         self.cache_dir.mkdir(parents=True, exist_ok=True)
+        shard_meta = normalize_shard_meta(plan.shard_meta)
         if plan.kind == "block":
             meta = {
                 "schema": PLAN_SCHEMA_VERSION,
                 "kind": "block",
                 "fingerprint": plan.fingerprint,
+                "shard_meta": self._shard_meta_json(shard_meta),
                 "backend": plan.backend,
                 "block_rows": plan.bell.block_rows,
                 "num_rows": plan.bell.num_rows,
@@ -336,6 +405,7 @@ class PlanCache:
                 "kind": "global",
                 "config": plan.config.to_dict(),
                 "fingerprint": plan.fingerprint,
+                "shard_meta": self._shard_meta_json(shard_meta),
                 "features_fp": plan.features_fp,
                 "num_cols": plan.ell.num_cols,
                 "predicted_us": plan.predicted_us,
@@ -355,7 +425,7 @@ class PlanCache:
                 arrays["q_minmax"] = np.asarray(
                     [float(plan.quantized.x_min), float(plan.quantized.x_max)],
                     np.float32)
-        path = self._path(plan.fingerprint, plan.kind)
+        path = self._path(plan.fingerprint, plan.kind, shard_meta)
         # np.savez appends ".npz" to names lacking it — keep the tmp name
         # ending in ".npz" so the atomic rename target is what was written.
         tmp = path.with_name(path.name + ".tmp.npz")
@@ -384,9 +454,9 @@ class PlanCache:
             except OSError:
                 pass  # racing process already collected it
 
-    def _load_disk(self, fingerprint: str,
-                   kind: str = "global") -> Optional[AnyPlan]:
-        path = self._path(fingerprint, kind)
+    def _load_disk(self, fingerprint: str, kind: str = "global",
+                   shard_meta=None) -> Optional[AnyPlan]:
+        path = self._path(fingerprint, kind, shard_meta)
         if not path.exists():
             return None
         try:
@@ -398,6 +468,14 @@ class PlanCache:
                 if meta.get("schema") != PLAN_SCHEMA_VERSION:
                     return None
                 if meta.get("kind", "global") != kind:
+                    return None
+                # A sharded request must get exactly the entry tuned for
+                # that (mesh, shard) — a filename collision or hand-renamed
+                # file never serves another shard's operand.
+                entry_sm = meta.get("shard_meta")
+                entry_sm = None if entry_sm is None \
+                    else normalize_shard_meta(entry_sm)
+                if entry_sm != shard_meta:
                     return None
                 quantized = None
                 if meta.get("quant_bits") is not None:
@@ -429,7 +507,8 @@ class PlanCache:
                             meta.get("measured_spmm_us", 0.0)),
                         measured_bucket_us=tuple(
                             float(u)
-                            for u in meta.get("measured_bucket_us", [])))
+                            for u in meta.get("measured_bucket_us", [])),
+                        shard_meta=shard_meta)
                     self._touch(path)
                     return plan
                 ell = ELL(jnp.asarray(z["ell_val"]), jnp.asarray(z["ell_col"]),
@@ -441,22 +520,22 @@ class PlanCache:
                 features_fp=str(meta.get("features_fp", "")),
                 predicted_us=float(meta.get("predicted_us", 0.0)),
                 measured_spmm_us=float(meta.get("measured_spmm_us", 0.0)),
-                measured_sample_us=float(meta.get("measured_sample_us", 0.0)))
+                measured_sample_us=float(meta.get("measured_sample_us", 0.0)),
+                shard_meta=shard_meta)
         except (OSError, KeyError, ValueError, TypeError,
                 json.JSONDecodeError, zipfile.BadZipFile):
             return None  # corrupt entry: treat as miss, tuner will rewrite
 
-    def _peek_disk(self, fingerprint: str, kind: str) -> bool:
-        """Header-only validity check: schema + kind from the JSON meta,
-        no array deserialization, no mtime touch (see ``__contains__``)."""
-        path = self._path(fingerprint, kind)
-        if not path.exists():
-            return False
+    @staticmethod
+    def _peek_file(path: Path, fingerprint: str) -> bool:
+        """Header-only validity check of one entry file: schema + stored
+        fingerprint from the JSON meta, no array deserialization, no mtime
+        touch (see ``__contains__``)."""
         try:
             with np.load(path) as z:
                 meta = json.loads(bytes(z["meta"].tobytes()).decode())
             return (meta.get("schema") == PLAN_SCHEMA_VERSION
-                    and meta.get("kind", "global") == kind)
+                    and meta.get("fingerprint") == fingerprint)
         except (OSError, KeyError, ValueError, TypeError,
                 json.JSONDecodeError, zipfile.BadZipFile):
             return False

@@ -1,0 +1,480 @@
+"""Sharded serving subsystem tests (repro.serving).
+
+Covers the ISSUE's required cases: shard parity with the single-device
+dense reference (and the ``granularity="block"`` path) for 1/2/4 shards
+including a non-dividing row count — in-process on the launch loop, and
+in subprocesses with 1/2/4 *forced host devices* for the shard_map path —
+plus partition/halo correctness, the ``(fingerprint, kind, shard_meta)``
+cache keying with the v4 schema gate, the pure-cache-hit warm restart,
+micro-batching, and the ``gnn.evaluate(shards=N)`` parity path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.serving import (GNNServer, concat_shard_outputs, partition_csr,
+                           plan_shards, row_bounds, shard_meta_for)
+from repro.tuning import PLAN_SCHEMA_VERSION, PlanCache
+from repro.tuning.autotune import tune_blocked
+
+from conftest import random_csr
+
+# Cheap, exhaustive tuning knobs: wide-enough width so no candidate
+# truncates edges (the engine machinery is under test, not sampling loss).
+def _exact_tk(csr, **over):
+    w = max(int(np.asarray(csr.row_nnz()).max()), 1)
+    tk = dict(widths=(w,), include_full=True, measure_plan=False,
+              warmup=0, iters=1)
+    tk.update(over)
+    return tk
+
+
+def _dense_ref(csr, x):
+    return np.asarray(ref.csr_spmm(csr.row_ptr, csr.col_ind, csr.val, x))
+
+
+# ---------------------------------------------------------------------------
+# partition
+# ---------------------------------------------------------------------------
+
+def test_row_bounds_balanced_non_dividing():
+    b = row_bounds(70, 4)
+    sizes = np.diff(b)
+    assert b[0] == 0 and b[-1] == 70
+    assert sizes.tolist() == [18, 18, 17, 17]
+    with pytest.raises(ValueError):
+        row_bounds(3, 4)
+
+
+def test_partition_preserves_edges_and_remaps_halo(rng):
+    g = random_csr(rng, 50, 5.0, skew=0.8)
+    shards = partition_csr(g, 3)
+    assert sum(s.csr.nnz for s in shards) == g.nnz
+    ci = np.asarray(g.col_ind)
+    rp = np.asarray(g.row_ptr)
+    for s in shards:
+        # remapped columns resolve, via gather_index, to the original ids
+        local_cols = np.asarray(s.csr.col_ind)
+        assert local_cols.max(initial=0) < s.csr.num_cols
+        restored = s.gather_index[local_cols]
+        np.testing.assert_array_equal(restored, ci[rp[s.row_start]:
+                                                   rp[s.row_stop]])
+        # halo ids are exactly the out-of-range columns, sorted unique
+        orig = ci[rp[s.row_start]:rp[s.row_stop]]
+        want_halo = np.unique(
+            orig[(orig < s.row_start) | (orig >= s.row_stop)])
+        np.testing.assert_array_equal(s.halo_ids, want_halo)
+        # values ride along unchanged
+        np.testing.assert_array_equal(
+            np.asarray(s.csr.val),
+            np.asarray(g.val)[rp[s.row_start]:rp[s.row_stop]])
+
+
+def test_partition_gather_builds_shard_operand(rng):
+    g = random_csr(rng, 40, 4.0)
+    x = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    for s in partition_csr(g, 4):
+        bs = np.asarray(s.gather(x))
+        assert bs.shape == (s.num_local + s.num_halo, 8)
+        np.testing.assert_array_equal(bs[:s.num_local],
+                                      np.asarray(x)[s.row_start:s.row_stop])
+
+
+# ---------------------------------------------------------------------------
+# shard parity (launch loop, in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_sharded_engine_matches_dense_reference(rng, num_shards):
+    """Engine output == single-device dense reference — including a graph
+    whose 70 rows don't divide the 4-way shard count."""
+    g = random_csr(rng, 70, 6.0, skew=0.9)
+    x = jnp.asarray(rng.normal(size=(70, 12)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=num_shards, cache=PlanCache(),
+                       tune_kwargs=_exact_tk(g))
+    got = np.asarray(server.aggregate())
+    np.testing.assert_allclose(got, _dense_ref(g, x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_sharded_engine_bit_exact_on_integer_inputs(rng, num_shards):
+    """Float plans, integer-valued inputs: every accumulation is exact in
+    f32, so sharding must reproduce the dense reference *bit for bit*."""
+    g = random_csr(rng, 62, 5.0, weighted=False)   # unit edge weights
+    x = jnp.asarray(rng.integers(-8, 8, size=(62, 10)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=num_shards, cache=PlanCache(),
+                       tune_kwargs=_exact_tk(g))
+    np.testing.assert_array_equal(np.asarray(server.aggregate()),
+                                  _dense_ref(g, x))
+
+
+def test_sharded_engine_matches_block_path(rng):
+    """Sharded vs the single-device granularity="block" plan, same knobs."""
+    from repro.core.aes_spmm import aes_spmm
+
+    g = random_csr(rng, 70, 6.0, skew=0.9)
+    x = jnp.asarray(rng.normal(size=(70, 12)).astype(np.float32))
+    tk = _exact_tk(g)
+    want = aes_spmm(g, x, strategy="auto", granularity="block",
+                    plan_cache=PlanCache(), tune_kwargs=tk)
+    server = GNNServer(g, x, num_shards=4, cache=PlanCache(),
+                       tune_kwargs=tk)
+    np.testing.assert_allclose(np.asarray(server.aggregate()),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_shards_within_quant_tolerance(rng):
+    g = random_csr(rng, 48, 5.0, weighted=False)
+    x = jnp.asarray(rng.normal(size=(48, 8)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=3, quant=8, cache=PlanCache(),
+                       tune_kwargs=_exact_tk(g))
+    assert all(p.quantized is not None and p.quantized.bits == 8
+               for p in server.plans)
+    got = np.asarray(server.aggregate())
+    want = _dense_ref(g, x)
+    # per-element reconstruction error <= scale/2; rows sum |A| * err
+    max_scale = max(float(p.quantized.scale) for p in server.plans)
+    rp = np.asarray(g.row_ptr)
+    rowsum = np.bincount(
+        np.repeat(np.arange(g.num_rows), rp[1:] - rp[:-1]),
+        weights=np.abs(np.asarray(g.val)), minlength=g.num_rows)
+    atol = 0.5 * max_scale * rowsum.max(initial=0.0) + 1e-5
+    assert np.max(np.abs(got - want)) <= atol
+
+
+def test_micro_batching_flush(rng):
+    """One flush serves mixed requests: cached-features dedupe + all float
+    operands in a single column-concatenated pass."""
+    g = random_csr(rng, 30, 4.0)
+    x = jnp.asarray(rng.normal(size=(30, 6)).astype(np.float32))
+    h = jnp.asarray(rng.normal(size=(30, 9)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=2, cache=PlanCache(),
+                       tune_kwargs=_exact_tk(g))
+    t0 = server.submit()          # cached features
+    t1 = server.submit(h)
+    t2 = server.submit()          # dedupes with t0
+    t3 = server.submit(h * 2.0)
+    out = server.flush()
+    assert server.stats["requests"] == 4
+    assert server.stats["sharded_passes"] == 2   # one cached + one concat
+    np.testing.assert_allclose(np.asarray(out[t0]), _dense_ref(g, x),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out[t0]), np.asarray(out[t2]))
+    np.testing.assert_allclose(np.asarray(out[t1]), _dense_ref(g, h),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[t3]),
+                               _dense_ref(g, np.asarray(h) * 2.0),
+                               rtol=1e-4, atol=1e-4)
+    assert server.flush() == []   # queue drained
+
+
+# ---------------------------------------------------------------------------
+# shard parity under forced host devices (shard_map path)
+# ---------------------------------------------------------------------------
+
+_DEVICE_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.kernels import ref
+from repro.serving import GNNServer
+from repro.tuning import PlanCache
+
+n_dev = {n_dev}
+assert jax.device_count() == n_dev, jax.device_count()
+rng = np.random.default_rng(7)
+rows = 70
+src = rng.integers(0, rows, 6 * rows)
+dst = rng.integers(0, rows, 6 * rows)
+from repro.core.graph import csr_from_edges
+g = csr_from_edges(src, dst, rows)
+x = jnp.asarray(rng.normal(size=(rows, 12)).astype(np.float32))
+want = np.asarray(ref.csr_spmm(g.row_ptr, g.col_ind, g.val, x))
+w = int(np.asarray(g.row_nnz()).max())
+tk = dict(widths=(w,), include_full=True, measure_plan=False,
+          warmup=0, iters=1)
+for mode in ("loop", "spmd"):
+    server = GNNServer(g, x, num_shards=n_dev, mode=mode,
+                       cache=PlanCache(), tune_kwargs=tk)
+    got = np.asarray(server.aggregate())
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+print("DEVICES-OK", n_dev)
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_engine_parity_on_forced_host_devices(n_dev):
+    """Loop + shard_map engines match the dense reference with 1/2/4 real
+    host devices (fresh process; XLA device count is init-time only)."""
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}")
+    r = subprocess.run(
+        [sys.executable, "-c", _DEVICE_SCRIPT.format(n_dev=n_dev)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert f"DEVICES-OK {n_dev}" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_server_smoke_cli_subprocess():
+    """The CI gate end to end: `python -m repro.serving.server --smoke`
+    on 4 forced host devices."""
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.serving.server", "--smoke", "--json"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert "smoke: OK" in r.stdout, r.stdout + r.stderr
+    report = json.loads(r.stdout.splitlines()[0])
+    assert report["parity_spmd"] == "ok" and report["warm_disk_hits"] == 4
+
+
+# ---------------------------------------------------------------------------
+# plan cache: shard_meta keying + schema v4
+# ---------------------------------------------------------------------------
+
+def test_sharded_plans_coexist_with_whole_graph_plans(rng):
+    """A shard's plan and the whole-graph plan of the *same CSR content*
+    live under different keys — no collision either way."""
+    g = random_csr(rng, 24, 4.0)
+    x = jnp.asarray(rng.normal(size=(24, 6)).astype(np.float32))
+    cache = PlanCache()
+    shards = partition_csr(g, 1)       # shard 0 of 1 == the whole graph
+    tk = _exact_tk(g)
+    [sharded] = plan_shards(shards, x, cache=cache, tune_kwargs=tk)
+    global_plan = tune_blocked(shards[0].csr, x, cache=cache, **tk)
+    assert sharded.fingerprint == global_plan.fingerprint
+    assert len(cache) == 2             # distinct entries
+    sm = shard_meta_for(shards[0])
+    assert cache.get(sharded.fingerprint, kind="block",
+                     shard_meta=sm) is sharded
+    assert cache.get(global_plan.fingerprint, kind="block") is global_plan
+    assert cache.get(global_plan.fingerprint, kind="block").shard_meta is None
+
+
+def test_shard_meta_disk_round_trip(rng, tmp_path):
+    g = random_csr(rng, 30, 4.0)
+    x = jnp.asarray(rng.normal(size=(30, 6)).astype(np.float32))
+    c1 = PlanCache(cache_dir=tmp_path)
+    shards = partition_csr(g, 2)
+    plans = plan_shards(shards, x, cache=c1, quant=8,
+                        tune_kwargs=_exact_tk(g))
+
+    c2 = PlanCache(cache_dir=tmp_path)   # fresh process simulation
+    for s, p in zip(shards, plans):
+        loaded = c2.get(p.fingerprint, kind="block",
+                        shard_meta=shard_meta_for(s))
+        assert loaded is not None
+        assert loaded.shard_meta == p.shard_meta
+        np.testing.assert_array_equal(np.asarray(loaded.bell.val),
+                                      np.asarray(p.bell.val))
+        np.testing.assert_array_equal(np.asarray(loaded.quantized.q),
+                                      np.asarray(p.quantized.q))
+    assert c2.stats.disk_hits == 2
+    # a different mesh shape is a different key: miss
+    assert c2.get(plans[0].fingerprint, kind="block",
+                  shard_meta=((4,), 0, 4)) is None
+
+
+def test_schema_v3_sharded_less_entries_rejected(rng, tmp_path):
+    """v4 gate: an entry stamped with the previous schema (no shard_meta
+    discriminator) is a miss, never reinterpreted."""
+    assert PLAN_SCHEMA_VERSION == 4
+    g = random_csr(rng, 26, 4.0)
+    x = jnp.asarray(rng.normal(size=(26, 6)).astype(np.float32))
+    c1 = PlanCache(cache_dir=tmp_path)
+    plan = tune_blocked(g, x, cache=c1, **_exact_tk(g))
+    [path] = tmp_path.glob("*.block.npz")
+
+    # rewrite the entry as a v3 (pre-shard_meta) one
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = json.loads(bytes(arrays["meta"].tobytes()).decode())
+    meta["schema"] = 3
+    del meta["shard_meta"]
+    arrays["meta"] = np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8)
+    np.savez(path, **arrays)
+
+    c2 = PlanCache(cache_dir=tmp_path)
+    assert c2.get(plan.fingerprint, kind="block") is None
+    assert plan.fingerprint not in c2
+
+
+def test_plan_shard_requants_on_stale_cache_knobs(rng, tmp_path):
+    """A warm cache tuned with a different quant setting must not leak
+    into the request: float request never serves a lossy quantized plan,
+    quant request never silently degrades to float."""
+    g = random_csr(rng, 28, 4.0)
+    x = jnp.asarray(rng.normal(size=(28, 6)).astype(np.float32))
+    cache = PlanCache(cache_dir=tmp_path)
+    shards = partition_csr(g, 2)
+    tk = _exact_tk(g)
+
+    floats = plan_shards(shards, x, cache=cache, tune_kwargs=tk)
+    assert all(p.quantized is None for p in floats)
+    quants = plan_shards(shards, x, cache=cache, quant=8, tune_kwargs=tk)
+    assert all(p.quantized is not None and p.quantized.bits == 8
+               for p in quants)
+    floats2 = plan_shards(shards, x, cache=cache, tune_kwargs=tk)
+    assert all(p.quantized is None for p in floats2)
+    # the retuned entries overwrote the stale ones: a fresh cache read of
+    # the same dir now matches the last request
+    c2 = PlanCache(cache_dir=tmp_path)
+    for s in shards:
+        hit = c2.get(floats2[s.shard_idx].fingerprint, kind="block",
+                     shard_meta=shard_meta_for(s))
+        assert hit is not None and hit.quantized is None
+
+
+def test_plan_shard_requants_on_stale_features(rng, tmp_path):
+    """Same quant bits but a cache warmed on *older features*: the plan
+    must be re-tuned on the current matrix, not silently downgraded to
+    float serving (nor served stale)."""
+    g = random_csr(rng, 26, 4.0)
+    x1 = jnp.asarray(rng.normal(size=(26, 6)).astype(np.float32))
+    x2 = jnp.asarray(rng.normal(size=(26, 6)).astype(np.float32))
+    cache = PlanCache(cache_dir=tmp_path)
+    shards = partition_csr(g, 2)
+    tk = _exact_tk(g)
+    plan_shards(shards, x1, cache=cache, quant=8, tune_kwargs=tk)
+
+    server = GNNServer(g, x2, num_shards=2, quant=8,
+                       cache=PlanCache(cache_dir=tmp_path), tune_kwargs=tk)
+    assert all(p.quantized is not None for p in server.plans)
+    assert all(r is None for r in server._resident)  # quantized path live
+    got = np.asarray(server.aggregate())
+    from repro.core.quantization import dequantize, quantize
+    # output reflects x2's quantized reconstruction, not x1's
+    for s, p in zip(server.shards, server.plans):
+        recon = dequantize(p.quantized)
+        np.testing.assert_allclose(
+            np.asarray(recon), np.asarray(dequantize(quantize(
+                s.gather(x2), 8))), rtol=1e-6, atol=1e-6)
+    assert got.shape == (26, 6)
+
+
+def test_contains_sees_sharded_entries(rng, tmp_path):
+    """__contains__ covers the shard_meta key space — memory and disk."""
+    g = random_csr(rng, 20, 3.0)
+    x = jnp.asarray(rng.normal(size=(20, 4)).astype(np.float32))
+    cache = PlanCache(cache_dir=tmp_path)
+    [plan] = plan_shards(partition_csr(g, 2)[:1], x, cache=cache,
+                         tune_kwargs=_exact_tk(g))
+    assert plan.fingerprint in cache            # memory tier
+    assert plan.fingerprint in PlanCache(cache_dir=tmp_path)  # disk tier
+    assert plan.fingerprint not in PlanCache()  # fresh memory-only: miss
+
+
+def test_loop_mode_serves_quantized_without_request_hashing(rng, monkeypatch):
+    """The request hot path never hashes: quantized shards drop the float
+    resident and serve the verified uint8 operand directly (x=None), and
+    dense operands route through a quantless plan view."""
+    import repro.tuning.plan_cache as plan_cache_mod
+
+    g = random_csr(rng, 32, 4.0, weighted=False)
+    x = jnp.asarray(rng.normal(size=(32, 6)).astype(np.float32))
+    h = jnp.asarray(rng.normal(size=(32, 5)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=2, quant=8, cache=PlanCache(),
+                       tune_kwargs=_exact_tk(g))
+    assert all(r is None for r in server._resident)   # no float residents
+    want = np.asarray(server.aggregate())
+
+    def boom(*a, **k):
+        raise AssertionError("request hot path hashed the operand")
+
+    monkeypatch.setattr(plan_cache_mod, "features_fingerprint", boom)
+    got = np.asarray(server.aggregate())
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_allclose(np.asarray(server.aggregate(h)),
+                               _dense_ref(g, h), rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_preserves_pending_queue(rng):
+    g = random_csr(rng, 24, 3.0)
+    x = jnp.asarray(rng.normal(size=(24, 4)).astype(np.float32))
+    h = jnp.asarray(rng.normal(size=(24, 7)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=2, cache=PlanCache(),
+                       tune_kwargs=_exact_tk(g))
+    t = server.submit(h)
+    out = server.aggregate()          # must not swallow ticket t
+    np.testing.assert_allclose(np.asarray(out), _dense_ref(g, x),
+                               rtol=1e-5, atol=1e-5)
+    results = server.flush()
+    np.testing.assert_allclose(np.asarray(results[t]), _dense_ref(g, h),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_shard_meta_validation():
+    from repro.tuning import normalize_shard_meta
+
+    assert normalize_shard_meta(None) is None
+    assert normalize_shard_meta(([4], "1", 4)) == ((4,), 1, 4)
+    for bad in (((4,), 4, 4), ((4,), -1, 4), ((4,), 0, 0),
+                ((1,), 0, 4), ((), 0, 1)):
+        with pytest.raises(ValueError):
+            normalize_shard_meta(bad)
+
+
+def test_warm_cache_skips_all_tuning(rng, tmp_path, monkeypatch):
+    """Acceptance gate: a second server over the same disk cache performs
+    *no* tuning work — no ranking, no sampling, no measurement."""
+    import repro.tuning.cost_model as cost_model_mod
+    import repro.tuning.measure as measure_mod
+
+    g = random_csr(rng, 44, 5.0, skew=0.8)
+    x = jnp.asarray(rng.normal(size=(44, 8)).astype(np.float32))
+    tk = _exact_tk(g)
+    c1 = PlanCache(cache_dir=tmp_path)
+    server1 = GNNServer(g, x, num_shards=4, cache=c1, tune_kwargs=tk)
+    want = np.asarray(server1.aggregate())
+
+    def boom(*a, **k):
+        raise AssertionError("tuning ran on a warm plan cache")
+
+    monkeypatch.setattr(cost_model_mod, "rank", boom)
+    monkeypatch.setattr(measure_mod, "time_us", boom)
+    import repro.core.sampling as sampling_mod
+    monkeypatch.setattr(sampling_mod, "sample_csr_to_block_ell", boom)
+
+    c2 = PlanCache(cache_dir=tmp_path)
+    server2 = GNNServer(g, x, num_shards=4, cache=c2, tune_kwargs=tk)
+    assert c2.stats.misses == 0 and c2.stats.disk_hits == 4
+    np.testing.assert_allclose(np.asarray(server2.aggregate()), want,
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# gnn.evaluate(shards=N) parity path
+# ---------------------------------------------------------------------------
+
+def test_evaluate_sharded_matches_exact(rng):
+    from repro.gnn import evaluate, make_dataset, train_model
+
+    ds = make_dataset("cora", scale=0.08, seed=3)
+    params, _ = train_model(ds, "gcn", epochs=20, seed=3)
+    w = int(np.asarray(ds.gcn_adj.row_nnz()).max())
+    acc_exact = evaluate(ds, "gcn", params, strategy="full")
+    acc_sharded = evaluate(
+        ds, "gcn", params, strategy="auto", shards=3,
+        plan_cache=PlanCache(),
+        tune_kwargs=dict(widths=(w,), include_full=True,
+                         measure_plan=False, warmup=0, iters=1))
+    assert acc_sharded == pytest.approx(acc_exact, abs=1e-6)
+    with pytest.raises(ValueError):
+        evaluate(ds, "gcn", params, strategy="aes", shards=2)
+
+
+def test_concat_shard_outputs_order(rng):
+    outs = [np.full((2, 3), s, np.float32) for s in range(3)]
+    got = np.asarray(concat_shard_outputs(outs))
+    assert got.shape == (6, 3)
+    np.testing.assert_array_equal(got[::2, 0], [0, 1, 2])
