@@ -8,9 +8,9 @@ import sys
 
 def main() -> None:
     from benchmarks import (accuracy_vs_w, autotune_gain, block_tuning_gain,
-                            kernel_blocks, kernel_speedup, motivation,
-                            quant_block_gain, quant_loading, sampling_cdf,
-                            serving_throughput)
+                            calibration_gain, kernel_blocks, kernel_speedup,
+                            motivation, quant_block_gain, quant_loading,
+                            sampling_cdf, serving_throughput)
 
     print("name,us_per_call,derived")
     sampling_cdf.run()
@@ -22,6 +22,7 @@ def main() -> None:
     autotune_gain.run()
     block_tuning_gain.run()
     quant_block_gain.run()
+    calibration_gain.run()
     serving_throughput.run()
     try:
         from benchmarks import roofline

@@ -307,8 +307,10 @@ def pad_csr_to_ell(csr: CSR, width: int | None = None) -> ELL:
 
     Returns an exact ``ELL`` when ``width >= max(row_nnz)``.
     """
+    # width floor of 1 keeps the ELL two-dimensional on an all-empty graph
+    # (a [rows, 0] operand breaks downstream kernel tiling)
     nnz = np.asarray(csr.row_nnz())
-    w = int(nnz.max()) if width is None else width
+    w = max(int(nnz.max(initial=0)), 1) if width is None else width
     from .sampling import sample_csr_to_ell_sfs  # first-W == all when w >= max nnz
 
     val, col = sample_csr_to_ell_sfs(csr.row_ptr, csr.col_ind, csr.val, w)

@@ -13,6 +13,12 @@ With a disk-backed cache (``$REPRO_PLAN_CACHE_DIR``) every host/device
 restart of the same serving topology is a pure cache hit: no re-ranking,
 no re-sampling, no re-quantization — the acceptance gate
 ``tests/test_serving.py::test_warm_cache_skips_all_tuning`` asserts it.
+
+Per-shard tunes feed the cost-model calibration loop like any other tune:
+with an active log (``repro.tuning.calibration``) each shard's bucket
+measurements and stitched-plan timing append (predicted, measured)
+records, so a serving fleet's first topology bring-up is also what earns
+later bring-ups their shrunken measurement budget.
 """
 from __future__ import annotations
 

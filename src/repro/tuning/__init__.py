@@ -47,13 +47,24 @@ the uint8 operand; the kernel fuses Eq. 2 into its gather) and launches are
 its own static row-DMA width, the partition picked by per-bucket
 microbenchmarks (``measure.measure_blocked_buckets``).
 
+Calibration loop (**calibration.py**): with ``$REPRO_PLAN_CACHE_DIR`` set,
+every step-3 measurement appends a (roofline terms, predicted, measured)
+JSONL record under ``<cache-dir>/calibration/<host>.jsonl``; once enough
+records exist for the host, ``rank()`` / ``tune()`` / ``tune_blocked()``
+automatically use the least-squares-fitted ``MachineModel``
+(``calibrated_machine_model``), and a fitted model with high recent rank
+correlation shrinks the measurement budget (``effective_budget``).  CLI:
+``python -m repro.tuning.calibration fit|show|clear`` (``--smoke`` for CI).
+
 Entry points: ``tune``, ``tune_blocked``, ``TunedPlan``, ``BlockedPlan``,
 ``PlanCache``, ``PLAN_SCHEMA_VERSION``, ``CandidateConfig``,
-``extract_features``, ``extract_block_features``, ``fingerprint``.
+``extract_features``, ``extract_block_features``, ``fingerprint``,
+``CalibrationLog``, ``fit_machine_model``, ``calibrated_machine_model``.
 """
 from repro.tuning.cost_model import (CandidateConfig, CostEstimate,
-                                     MachineModel, default_grid, predict,
-                                     rank)
+                                     MachineModel, RooflineTerms,
+                                     default_grid, predict, rank,
+                                     roofline_terms)
 from repro.tuning.features import (GraphFeatures, extract_block_features,
                                    extract_features, features_from_row_nnz,
                                    fingerprint)
@@ -63,9 +74,16 @@ from repro.tuning.plan_cache import (PLAN_SCHEMA_VERSION, BlockedPlan,
                                      reset_default_cache)
 
 
+#: Calibration names re-exported lazily (see ``__getattr__``) — eager
+#: imports here would double-load `python -m repro.tuning.calibration`.
+_CALIBRATION_EXPORTS = ("CalibrationLog", "calibrated_machine_model",
+                        "fit_machine_model", "host_fingerprint", "spearman")
+
+
 def __getattr__(name):
-    # Lazy: `python -m repro.tuning.autotune` imports this package first, and
-    # an eager autotune import there would double-load the CLI module.
+    # Lazy: `python -m repro.tuning.autotune` (and `.calibration`) import
+    # this package first, and an eager import of the CLI module here would
+    # double-load it (runpy warns, module state forks).
     if name == "tune":
         from repro.tuning.autotune import tune
 
@@ -74,14 +92,20 @@ def __getattr__(name):
         from repro.tuning.autotune import tune_blocked
 
         return tune_blocked
+    if name in _CALIBRATION_EXPORTS:
+        from repro.tuning import calibration
+
+        return getattr(calibration, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
-    "BlockedPlan", "CandidateConfig", "CostEstimate", "GraphFeatures",
-    "MachineModel", "PLAN_SCHEMA_VERSION", "PlanCache", "TunedPlan",
+    "BlockedPlan", "CalibrationLog", "CandidateConfig", "CostEstimate",
+    "GraphFeatures", "MachineModel", "PLAN_SCHEMA_VERSION", "PlanCache",
+    "RooflineTerms", "TunedPlan", "calibrated_machine_model",
     "default_cache", "default_grid", "extract_block_features",
     "extract_features", "features_from_row_nnz", "fingerprint",
-    "normalize_shard_meta", "predict", "rank", "reset_default_cache",
+    "fit_machine_model", "host_fingerprint", "normalize_shard_meta",
+    "predict", "rank", "reset_default_cache", "roofline_terms", "spearman",
     "tune", "tune_blocked",
 ]

@@ -17,23 +17,32 @@ Pipeline (one cache miss):
 Every subsequent call with the same graph is a cache hit: no sampling, no
 quantization, no measurement — just the SpMM over the cached operand.
 
+Calibration (``repro.tuning.calibration``): with an active log every
+measurement in step 3 appends a (predicted, measured) record; once enough
+exist for this host, step 2 ranks with the *fitted* ``MachineModel`` and —
+when that model's recent rank correlation is high — step 3 measures fewer
+candidates (``effective_budget``).
+
 CLI::
 
     python -m repro.tuning.autotune --dataset cora --scale 0.02
     python -m repro.tuning.autotune --granularity block --block-rows 4096
+    python -m repro.tuning.autotune --cache-dir /tmp/plans --calibrate
     python -m repro.tuning.autotune --smoke     # tiny fixed-seed run for CI
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.graph import CSR
-from repro.tuning import cost_model, features as features_mod, measure
+from repro.tuning import calibration, cost_model, features as features_mod, \
+    measure
 from repro.tuning.cost_model import (CandidateConfig, DEFAULT_WIDTHS,
                                      MachineModel, default_grid)
 from repro.tuning.plan_cache import (BlockedPlan, PlanCache, TunedPlan,
@@ -57,13 +66,20 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
          cache: PlanCache | None = None,
          warmup: int = 1, iters: int = 3,
          shard_meta=None, refresh: bool = False,
+         seed: int = 0,
          verbose: bool = False) -> TunedPlan:
     """Pick (strategy, W, backend, quant) for ``csr`` and cache the plan.
 
     ``budget`` bounds how many candidates are *measured* (the whole grid is
     always ranked analytically first).  ``features`` is the dense operand the
-    SpMM will multiply; when omitted a synthetic f32[rows, 64] stands in
-    (timings stay representative because cost scales linearly in feat_dim).
+    SpMM will multiply; when omitted a synthetic f32[rows, 64] drawn with
+    ``seed`` stands in (timings stay representative because cost scales
+    linearly in feat_dim — and a fixed seed keeps repeated tunes, and the
+    calibration records they log, byte-reproducible).
+    ``machine=None`` ranks with the host-calibrated ``MachineModel`` when
+    enough (predicted, measured) pairs have been logged
+    (``repro.tuning.calibration``); a trustworthy calibrated model also
+    *shrinks* the measurement budget (``calibration.effective_budget``).
     ``shard_meta=(mesh_shape, shard_idx, num_shards)`` marks the plan as a
     per-shard serving plan — it is cached under the extended key
     ``(fingerprint, kind, shard_meta)`` so it never collides with the
@@ -87,7 +103,7 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
         features = np.asarray(dequantize(features))
     synthetic_features = features is None
     if synthetic_features:
-        rng = np.random.default_rng(0)
+        rng = np.random.default_rng(seed)
         features = np.asarray(
             rng.normal(size=(csr.num_rows, 64)), np.float32)
     feats = features_mod.extract_features(
@@ -103,14 +119,22 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
             raise ValueError(
                 "quantized candidate grid requires the real feature matrix "
                 "(pass `features=`)")
-    ranked = cost_model.rank(feats, candidates, machine, accuracy_weight)
+    resolved = machine if machine is not None \
+        else calibration.calibrated_machine_model()
+    ranked = cost_model.rank(feats, candidates, resolved, accuracy_weight)
     if verbose:
         for est in ranked:
             print("  " + est.as_row())
 
-    measured = measure.refine(csr, features, ranked, top_k=max(budget, 1),
+    # A calibrated model whose recent rank correlation on the logged pairs
+    # is high has earned a smaller measurement budget (warm-log tunes
+    # issue fewer measure_config calls than cold-log ones).
+    top_k = max(budget, 1)
+    if machine is None:
+        top_k = calibration.effective_budget(top_k, machine=resolved)
+    measured = measure.refine(csr, features, ranked, top_k=top_k,
                               warmup=warmup, iters=iters,
-                              accuracy_weight=accuracy_weight)
+                              accuracy_weight=accuracy_weight, feats=feats)
     best = measured[0]
     ell, quantized = measure.prepare_operand(csr, best.config, features)
     plan = TunedPlan(
@@ -138,6 +162,7 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                  measure_buckets: bool = True,
                  warmup: int = 1, iters: int = 3,
                  shard_meta=None, refresh: bool = False,
+                 seed: int = 0,
                  verbose: bool = False) -> BlockedPlan:
     """Pick (strategy, W) *per fixed-size row block* and cache the stitched
     mixed-width plan.
@@ -241,7 +266,7 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                 raise ValueError(
                     "quantized blocked plans require the real feature "
                     "matrix (pass `features=`)")
-            rng = np.random.default_rng(0)
+            rng = np.random.default_rng(seed)
             features = np.asarray(
                 rng.normal(size=(csr.num_rows, 64)), np.float32)
     if qf is not None and features is not None \
@@ -257,6 +282,11 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
 
     block_feats = features_mod.extract_block_features(
         csr, block_rows, feat_dim=feat_dim)
+    if machine is None:
+        # resolve once — re-resolving (and memo-probing) per block would
+        # stat the calibration log num_blocks times; fall back to the
+        # explicit default so rank() never re-resolves either
+        machine = calibration.calibrated_machine_model() or MachineModel()
     configs, predicted_us = [], 0.0
     for b, bf in enumerate(block_feats):
         candidates = [CandidateConfig(s, w, backend, quant_bits)
@@ -305,9 +335,8 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
     # Each per-block estimate carries the per-kernel launch overhead, but
     # the stitched plan dispatches all blocks from one launch per width
     # bucket — keep the overhead once per bucket, not num_blocks times.
-    m = machine or MachineModel()
     predicted_us -= (len(block_feats) - max(len(buckets), 1)) \
-        * m.launch_overhead_us
+        * machine.launch_overhead_us
 
     plan = BlockedPlan(bell=bell, backend=backend, fingerprint=fp,
                        quantized=qf,
@@ -320,13 +349,61 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
     if measure_plan:
         plan.measured_spmm_us = measure.time_us(
             plan.run, features, warmup=warmup, iters=iters)
+        _log_blocked_plan(block_feats, configs, backend, quant_bits, plan)
     cache.put(plan)
     return plan
+
+
+def _log_blocked_plan(block_feats, configs, backend, quant_bits,
+                      plan) -> None:
+    """One whole-plan calibration record (kind="plan"): the per-block
+    roofline terms summed vs the stitched plan's measured latency.  This is
+    what makes per-shard serving tunes (``repro.serving.plans``) feed the
+    calibration loop even on the jax backend, where no per-bucket
+    measurement runs.  No-op without an active log; never raises."""
+    if calibration.default_log() is None:
+        return
+    try:
+        t_flops = t_bytes = t_slots = 0.0
+        for bf, (s, w) in zip(block_feats, configs):
+            t = cost_model.roofline_terms(
+                bf, CandidateConfig(s, w, backend, quant_bits))
+            t_flops += t.flops
+            t_bytes += t.bytes
+            t_slots += t.slots
+        terms = cost_model.RooflineTerms(t_flops, t_bytes, t_slots)
+        calibration.log_measurement(
+            "plan",
+            {"strategy": "block", "sh_width": 0, "backend": backend,
+             "quant_bits": quant_bits},
+            terms, plan.predicted_us, plan.measured_spmm_us,
+            {"num_rows": plan.bell.num_rows,
+             "num_blocks": plan.bell.num_blocks,
+             "feat_dim": block_feats[0].feat_dim if block_feats else 0})
+    except Exception:
+        pass
 
 
 # ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
+
+def _calibration_status() -> dict:
+    """Report fields describing the active calibration log, if any."""
+    log = calibration.default_log()
+    if log is None:
+        return {"calibration": "off"}
+    records = log.records()
+    lat = [r for r in records
+           if r.get("kind") in calibration.LATENCY_KINDS]
+    return {"calibration": {
+        "path": str(log.path_for()),
+        "records": len(records),
+        "fitted": calibration.calibrated_machine_model(log=log) is not None,
+        "min_records": calibration.MIN_FIT_RECORDS,
+        "latency_records": len(lat),
+    }}
+
 
 def _run_cli(args: argparse.Namespace) -> dict:
     import time
@@ -337,6 +414,17 @@ def _run_cli(args: argparse.Namespace) -> dict:
         raise SystemExit(
             f"unknown dataset {args.dataset!r}; choose from: "
             + ", ".join(sorted(SYNTHETIC_DATASETS)))
+
+    if args.no_calibration:
+        calibration.set_default_log(None)
+    elif args.calibrate:
+        root = args.cache_dir or os.environ.get("REPRO_PLAN_CACHE_DIR")
+        if not root:
+            raise SystemExit("--calibrate needs --cache-dir or "
+                             "$REPRO_PLAN_CACHE_DIR (the log lives beside "
+                             "the plan cache)")
+        calibration.set_default_log(calibration.CalibrationLog(
+            calibration.calibration_dir(root)))
 
     if args.smoke:
         ds_name, scale, widths, budget = "cora", 0.1, (16, 32, 64), 4
@@ -435,6 +523,7 @@ def _run_cli(args: argparse.Namespace) -> dict:
         "cache_hit_us": round(hit_us, 2),
         "cache_stats": {"hits": cache.stats.hits,
                         "misses": cache.stats.misses},
+        **_calibration_status(),
     }
     print(json.dumps(report, indent=None if args.json else 2))
     if args.smoke:
@@ -474,6 +563,14 @@ def main(argv: Sequence[str] | None = None) -> None:
     p.add_argument("--cache-dir", default=None,
                    help="persist plans to this directory "
                         "(default: in-memory, or $REPRO_PLAN_CACHE_DIR)")
+    p.add_argument("--calibrate", action="store_true",
+                   help="log (predicted, measured) pairs to "
+                        "<cache-dir>/calibration and rank with the "
+                        "host-fitted MachineModel once enough exist "
+                        "(see python -m repro.tuning.calibration)")
+    p.add_argument("--no-calibration", action="store_true",
+                   help="disable calibration logging/fitting even when "
+                        "$REPRO_PLAN_CACHE_DIR would enable it")
     p.add_argument("--smoke", action="store_true",
                    help="tiny fixed-seed run + cache-hit assertion (CI)")
     p.add_argument("--json", action="store_true",

@@ -63,7 +63,10 @@ class CandidateConfig:
 @dataclass(frozen=True)
 class MachineModel:
     """Roofline constants.  Defaults are deliberately generic — ranking only
-    depends on their ratios, and measurement recalibrates the winners."""
+    depends on their ratios, and measurement recalibrates the winners.
+    ``repro.tuning.calibration`` fits all of them per host from logged
+    (predicted, measured) pairs; ``rank()`` picks the fitted model up
+    automatically once enough records exist."""
 
     peak_flops: float = 2.0e12          # FLOP/s the SpMM path can sustain
     hbm_bw: float = 4.0e11              # bytes/s
@@ -71,6 +74,38 @@ class MachineModel:
     # per-ELL-slot sampling cost in ns (index math; paper §2.4 ordering)
     sample_cost_ns: dict = field(default_factory=lambda: {
         "sfs": 0.5, "afs": 1.5, "aes": 1.0, "full": 0.25})
+
+    def to_dict(self) -> dict:
+        return {"peak_flops": self.peak_flops, "hbm_bw": self.hbm_bw,
+                "launch_overhead_us": self.launch_overhead_us,
+                "sample_cost_ns": dict(self.sample_cost_ns)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MachineModel":
+        return cls(peak_flops=float(d["peak_flops"]),
+                   hbm_bw=float(d["hbm_bw"]),
+                   launch_overhead_us=float(d["launch_overhead_us"]),
+                   sample_cost_ns={k: float(v)
+                                   for k, v in d["sample_cost_ns"].items()})
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """The machine-independent workload terms the roofline multiplies: the
+    same triple feeds ``predict()`` and the calibration log, so a fitted
+    ``MachineModel`` re-prices exactly what the analytic one priced."""
+
+    flops: float     # SpMM + (optional) fused-dequant FLOPs
+    bytes: float     # HBM bytes moved: B-row gather + operand + output
+    slots: float     # padded ELL slots (the sampling pre-pass cost driver)
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes, "slots": self.slots}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RooflineTerms":
+        return cls(flops=float(d["flops"]), bytes=float(d["bytes"]),
+                   slots=float(d["slots"]))
 
 
 @dataclass(frozen=True)
@@ -91,30 +126,54 @@ def _ell_width(feats: GraphFeatures, cfg: CandidateConfig) -> int:
     return feats.max_row_nnz if cfg.strategy == "full" else cfg.sh_width
 
 
-def predict(feats: GraphFeatures, cfg: CandidateConfig,
-            machine: MachineModel | None = None,
-            accuracy_weight: float = 5.0) -> CostEstimate:
-    """Analytic (latency, accuracy proxy, score) for one candidate."""
-    m = machine or MachineModel()
+def roofline_terms(feats: GraphFeatures,
+                   cfg: CandidateConfig) -> RooflineTerms:
+    """(flops, bytes, slots) one steady-state SpMM of ``cfg`` executes over
+    ``feats`` — machine-independent, so the calibration fitter can re-price
+    logged measurements under any candidate ``MachineModel``."""
     W = max(_ell_width(feats, cfg), 1)
     rows, F = feats.num_rows, feats.feat_dim
     slots = rows * W                       # padded ELL slots the SpMM scans
     live = feats.sum_min_nnz(W)            # slots that carry an edge
 
-    # --- steady-state SpMM over the ELL operand --------------------------
     flops = 2.0 * slots * F
     feat_bytes = 4 if cfg.quant_bits is None else max(cfg.quant_bits // 8, 1)
     gather_bytes = live * F * feat_bytes   # B-row fetches (the hot loop)
     operand_bytes = slots * 8              # val f32 + col i32
     out_bytes = rows * F * 4
     dequant_flops = 2.0 * live * F if cfg.quant_bits is not None else 0.0
-    busy_s = max((flops + dequant_flops) / m.peak_flops,
-                 (gather_bytes + operand_bytes + out_bytes) / m.hbm_bw)
-    latency_us = busy_s * 1e6 + m.launch_overhead_us
+    return RooflineTerms(
+        flops=flops + dequant_flops,
+        bytes=gather_bytes + operand_bytes + out_bytes,
+        slots=float(slots))
 
+
+def terms_latency_us(terms: RooflineTerms, machine: MachineModel) -> float:
+    """Roofline latency for one steady-state SpMM over ``terms``."""
+    busy_s = max(terms.flops / machine.peak_flops,
+                 terms.bytes / machine.hbm_bw)
+    return busy_s * 1e6 + machine.launch_overhead_us
+
+
+def terms_sample_us(terms: RooflineTerms, strategy: str,
+                    machine: MachineModel) -> float:
+    """Latency of the one-time sampling pre-pass over ``terms.slots``."""
+    cost_ns = machine.sample_cost_ns.get(strategy, 1.0)
+    return terms.slots * cost_ns * 1e-3 + machine.launch_overhead_us
+
+
+def predict(feats: GraphFeatures, cfg: CandidateConfig,
+            machine: MachineModel | None = None,
+            accuracy_weight: float = 5.0) -> CostEstimate:
+    """Analytic (latency, accuracy proxy, score) for one candidate."""
+    m = machine or MachineModel()
+    W = max(_ell_width(feats, cfg), 1)
+
+    terms = roofline_terms(feats, cfg)
+    # --- steady-state SpMM over the ELL operand --------------------------
+    latency_us = terms_latency_us(terms, m)
     # --- one-time sampling pre-pass (skipped on plan-cache hits) ---------
-    sample_us = (slots * m.sample_cost_ns[cfg.strategy]) * 1e-3 \
-        + m.launch_overhead_us
+    sample_us = terms_sample_us(terms, cfg.strategy, m)
 
     # --- accuracy proxy --------------------------------------------------
     coverage = feats.covered_edge_frac(W)
@@ -149,6 +208,14 @@ def default_grid(widths: Sequence[int] = DEFAULT_WIDTHS,
 def rank(feats: GraphFeatures, candidates: Iterable[CandidateConfig],
          machine: MachineModel | None = None,
          accuracy_weight: float = 5.0) -> list[CostEstimate]:
-    """All candidates, best (lowest score) first."""
+    """All candidates, best (lowest score) first.
+
+    With ``machine=None`` the host-calibrated model is used when enough
+    (predicted, measured) pairs have been logged for this host
+    (``repro.tuning.calibration``); otherwise the generic defaults."""
+    if machine is None:
+        from repro.tuning.calibration import calibrated_machine_model
+
+        machine = calibrated_machine_model()
     ests = [predict(feats, c, machine, accuracy_weight) for c in candidates]
     return sorted(ests, key=lambda e: e.score)

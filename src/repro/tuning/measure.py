@@ -11,15 +11,22 @@ Two timings per candidate, matching the plan-cache split:
     a cache miss only;
   * ``spmm_us``  — the steady-state aggregation over the prepared operand,
     paid on every request.  The tuner ranks on this.
+
+Every measurement here is also a calibration sample: when a calibration
+log is active (``repro.tuning.calibration``), ``measure_config`` and
+``measure_blocked_buckets`` append one (roofline terms, predicted us,
+measured us) JSONL record per timing, from which the per-host
+``MachineModel`` constants are fitted.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import CSR, ELL, pad_csr_to_ell
 from repro.core.quantization import (QuantizedFeatures, as_quantized,
@@ -102,12 +109,14 @@ def measure_blocked_buckets(bell, b, buckets, *, quantized_meta=None,
     """
     from repro.kernels import ops
 
-    return [
+    timings = [
         time_us(ops.block_ell_spmm, bell, b, buckets=(bucket,),
                 quantized_meta=quantized_meta, interpret=interpret,
                 warmup=warmup, iters=iters)
         for bucket in buckets
     ]
+    _log_bucket_measurements(bell, b, buckets, timings, quantized_meta)
+    return timings
 
 
 def measure_bucket_partition(bell, b, buckets, *, quantized_meta=None,
@@ -138,20 +147,107 @@ class Measurement:
         return self.spmm_us + self.sample_us
 
 
+def _log_config_measurement(csr: CSR, features, cfg: CandidateConfig,
+                            m: Measurement, feats) -> None:
+    """Append this measurement's (terms, predicted, measured) pair to the
+    active calibration log (no-op without one; never raises — calibration
+    must not fail the tuning call it rides on)."""
+    from repro.tuning import calibration, cost_model
+    from repro.tuning import features as features_mod
+
+    if calibration.default_log() is None:
+        return
+    try:
+        if feats is None:
+            shaped = features.q if isinstance(features, QuantizedFeatures) \
+                else features
+            feats = features_mod.extract_features(
+                csr, feat_dim=int(np.shape(shaped)[1]),
+                with_fingerprint=False)
+        terms = cost_model.roofline_terms(feats, cfg)
+        if m.estimate is not None:
+            pred_spmm = m.estimate.latency_us
+            pred_sample = m.estimate.sample_us
+        else:
+            machine = calibration.calibrated_machine_model() \
+                or cost_model.MachineModel()
+            pred_spmm = cost_model.terms_latency_us(terms, machine)
+            pred_sample = cost_model.terms_sample_us(
+                terms, cfg.strategy, machine)
+        graph = {"num_rows": feats.num_rows, "nnz": feats.nnz,
+                 "feat_dim": feats.feat_dim,
+                 "max_row_nnz": feats.max_row_nnz}
+        calibration.log_measurement("spmm", cfg.to_dict(), terms,
+                                    pred_spmm, m.spmm_us, graph)
+        calibration.log_measurement("sample", cfg.to_dict(), terms,
+                                    pred_sample, m.sample_us, graph)
+    except Exception:
+        pass
+
+
+def _log_bucket_measurements(bell, b, buckets, timings,
+                             quantized_meta) -> None:
+    """Per-bucket calibration records for a width-bucket measurement pass
+    (same contract as :func:`_log_config_measurement`)."""
+    from repro.tuning import calibration, cost_model
+
+    if calibration.default_log() is None:
+        return
+    try:
+        feat = int(np.shape(b)[1])
+        fb = int(np.dtype(np.asarray(b).dtype).itemsize) \
+            if quantized_meta is not None else 4
+        qbits = fb * 8 if quantized_meta is not None else None
+        live2d = np.asarray(bell.live_w).reshape(
+            bell.num_blocks, bell.block_rows)
+        machine = calibration.calibrated_machine_model() \
+            or cost_model.MachineModel()
+        for (bucket_w, ids), us in zip(buckets, timings):
+            slots = float(sum(bell.block_rows * bell.widths[i]
+                              for i in ids))
+            rows = bell.block_rows * len(ids)
+            live = float(sum(live2d[i].sum() for i in ids))
+            dequant = 2.0 * live * feat if qbits is not None else 0.0
+            terms = cost_model.RooflineTerms(
+                flops=2.0 * slots * feat + dequant,
+                bytes=live * feat * fb + slots * 8 + rows * feat * 4,
+                slots=slots)
+            cfg = {"strategy": "block", "sh_width": int(bucket_w),
+                   "backend": "pallas", "quant_bits": qbits}
+            calibration.log_measurement(
+                "bucket", cfg, terms,
+                cost_model.terms_latency_us(terms, machine), us,
+                {"num_rows": rows, "feat_dim": feat,
+                 "num_blocks": len(ids)})
+    except Exception:
+        pass
+
+
 def measure_config(csr: CSR, features, cfg: CandidateConfig, *,
-                   warmup: int = 1, iters: int = 3) -> Measurement:
-    """Time one candidate end to end on the live backend."""
+                   warmup: int = 1, iters: int = 3,
+                   feats=None,
+                   estimate: Optional[CostEstimate] = None) -> Measurement:
+    """Time one candidate end to end on the live backend.
+
+    ``feats`` (the graph's ``GraphFeatures``) and ``estimate`` (the
+    analytic :class:`CostEstimate` that nominated this candidate) are
+    optional context for the calibration record; without them the features
+    are re-extracted and the prediction recomputed on demand.
+    """
     sample_us = time_us(lambda: prepare_operand(csr, cfg, features)[0],
                         warmup=warmup, iters=iters)
     ell, q = prepare_operand(csr, cfg, features)
     spmm_us = time_us(run_operand, ell, features, cfg, q,
                       warmup=warmup, iters=iters)
-    return Measurement(config=cfg, spmm_us=spmm_us, sample_us=sample_us)
+    m = Measurement(config=cfg, spmm_us=spmm_us, sample_us=sample_us,
+                    estimate=estimate)
+    _log_config_measurement(csr, features, cfg, m, feats)
+    return m
 
 
 def refine(csr: CSR, features, estimates: Sequence[CostEstimate], *,
            top_k: int = 6, warmup: int = 1, iters: int = 3,
-           accuracy_weight: float = 5.0) -> list[Measurement]:
+           accuracy_weight: float = 5.0, feats=None) -> list[Measurement]:
     """Measure the analytic top-k; return them sorted by *measured score*.
 
     The analytic ranking decides *which* configs are worth timing; the
@@ -163,8 +259,8 @@ def refine(csr: CSR, features, estimates: Sequence[CostEstimate], *,
     out = []
     for est in estimates[:top_k]:
         m = measure_config(csr, features, est.config,
-                           warmup=warmup, iters=iters)
-        m.estimate = est
+                           warmup=warmup, iters=iters,
+                           feats=feats, estimate=est)
         out.append(m)
 
     def measured_score(m: Measurement) -> float:

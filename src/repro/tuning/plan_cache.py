@@ -41,6 +41,13 @@ different schema (including pre-versioning ones with no stamp at all) are
 *rejected on load* and treated as a miss — the tuner rewrites them — rather
 than risk mis-reading old layouts.
 
+The cost-model calibration log (``repro.tuning.calibration``) lives in a
+``calibration/`` subdirectory *beside* the entry files.  Both the disk GC
+and ``clear(disk=True)`` operate on top-level ``*.npz`` entry files only,
+so evicting or clearing plans never discards the host's accumulated
+(predicted, measured) history — plans are rebuildable, calibration data is
+not.
+
 The module-level ``default_cache()`` (memory-only unless the env var is set)
 backs ``aes_spmm(..., strategy="auto")``.
 """
@@ -335,6 +342,17 @@ class PlanCache:
 
     def __len__(self) -> int:
         return len(self._mem)
+
+    @property
+    def calibration_dir(self) -> Optional[Path]:
+        """Where this cache's calibration log lives (None for a memory-only
+        cache): a subdirectory beside the plan entries, outside the
+        ``*.npz`` globs the disk GC and ``clear(disk=True)`` collect."""
+        if self.cache_dir is None:
+            return None
+        from repro.tuning.calibration import calibration_dir
+
+        return calibration_dir(self.cache_dir)
 
     def plans(self) -> list[AnyPlan]:
         """In-memory plans (least- to most-recently used)."""

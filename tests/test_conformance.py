@@ -1,0 +1,376 @@
+"""Cross-path kernel conformance harness (ISSUE 5 satellite).
+
+One parametrized grid runs **every execution path** — global ELL on the
+jax and Pallas backends, the fused AES kernel, BlockELL with width-bucketed
+launches, the fused-dequant quantized paths, the sharded serving engine
+(loop and spmd), and the tuned ``strategy="auto"`` entry points — against
+the ``kernels/ref.py`` oracles (and, where coverage is exact, the dense
+ground truth) on a shared set of adversarial graphs: an empty graph, a
+graph with empty rows, a single dense row amid a sparse tail, and a ragged
+skewed graph whose row count divides neither the block size nor the shard
+counts.
+
+This file replaces the per-path parity loops that used to be copy-pasted
+across ``test_block_ell.py`` (full-coverage vs dense, backend parity,
+auto-block vs dense), ``test_quant_block.py`` (quantized auto-block vs
+dense, quantized backend parity) and ``test_serving.py`` (sharded engine
+vs dense, sharded vs blocked, quantized shard tolerance): a calibration-
+driven config change that breaks any path's numerics now fails one
+harness, not a scatter of hand-rolled loops.  CI additionally asserts this
+module collects and runs with zero skips.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.aes_spmm import aes_spmm, sample
+from repro.core.graph import (csr_from_edges, csr_to_dense,
+                              pad_csr_to_ell, partition_width_buckets)
+from repro.core.quantization import dequantize, quantize
+from repro.core.sampling import sample_csr_to_block_ell
+from repro.kernels import ops, ref
+from repro.serving import GNNServer
+from repro.tuning import PlanCache
+
+from conftest import random_csr
+
+FEAT = 9            # odd on purpose: stresses the kernels' feature padding
+
+
+# ---------------------------------------------------------------------------
+# the shared adversarial graph grid
+# ---------------------------------------------------------------------------
+
+def _graph_empty():
+    """No edges at all: every row is empty, every output row is zero."""
+    return csr_from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64), 24)
+
+
+def _graph_empty_rows():
+    """Rows 20..39 have no edges; rows 0..19 are lightly connected."""
+    rng = np.random.default_rng(11)
+    dst = np.repeat(np.arange(20), 3)
+    src = rng.integers(0, 40, dst.shape[0])
+    val = rng.normal(size=dst.shape[0]).astype(np.float32)
+    return csr_from_edges(src, dst, 40, val)
+
+
+def _graph_dense_row():
+    """One 160-nnz row amid 2-nnz rows: W truncates it on every sampled
+    strategy, and 'full' pads the whole graph to its width."""
+    rng = np.random.default_rng(13)
+    dst = np.concatenate([np.full(160, 7), np.repeat(np.arange(50), 2)])
+    src = rng.integers(0, 50, dst.shape[0])
+    val = rng.normal(size=dst.shape[0]).astype(np.float32)
+    return csr_from_edges(src, dst, 50, val)
+
+
+def _graph_ragged():
+    """70 skewed rows: divides neither block_rows=16 nor 4 shards."""
+    return random_csr(np.random.default_rng(17), 70, 6.0, skew=0.8)
+
+
+_GRAPHS = {
+    "empty": _graph_empty,
+    "empty_rows": _graph_empty_rows,
+    "dense_row": _graph_dense_row,
+    "ragged70": _graph_ragged,
+}
+
+_CASE_CACHE: dict = {}
+
+
+def _case(name):
+    """(csr, x f32[rows, FEAT], dense ground truth) — built once per
+    module run."""
+    if name not in _CASE_CACHE:
+        g = _GRAPHS[name]()
+        # crc32, not hash(): str hashes are salted per process, and the
+        # grid must be identical run to run
+        rng = np.random.default_rng(zlib.crc32(name.encode()))
+        x = jnp.asarray(rng.normal(size=(g.num_rows, FEAT))
+                        .astype(np.float32))
+        want = np.asarray(csr_to_dense(g) @ x)
+        _CASE_CACHE[name] = (g, x, want)
+    return _CASE_CACHE[name]
+
+
+def _wmax(g) -> int:
+    return max(int(np.asarray(g.row_nnz()).max(initial=0)), 1)
+
+
+def _close(got, want, rtol=1e-5, atol=1e-5, label=""):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol, err_msg=label)
+
+
+def _quant_bound(g, scale: float) -> np.ndarray:
+    """Per-output-row quantization error bound: sum_k |A[r,k]| * scale/2."""
+    dense = np.abs(np.asarray(csr_to_dense(g)))
+    return dense.sum(axis=1, keepdims=True) * scale / 2 + 1e-4
+
+
+def _mixed_configs(n: int):
+    """A truncating mixed-strategy block plan, cycled to n blocks."""
+    pool = [("aes", 8), ("sfs", 4), ("afs", 16), ("full", 0), ("aes", 2),
+            ("sfs", 32)]
+    return [pool[i % len(pool)] for i in range(n)]
+
+
+def _exact_tune_kwargs(g, **over):
+    """Tuning knobs under which every candidate covers all edges, so the
+    tuned output must equal the dense ground truth (engine machinery is
+    under test, not sampling loss)."""
+    w = _wmax(g)
+    tk = dict(widths=(w, 2 * w), include_full=True, measure_plan=False,
+              warmup=0, iters=1)
+    tk.update(over)
+    return tk
+
+
+# ---------------------------------------------------------------------------
+# path runners: each asserts one execution path against its oracle(s)
+# ---------------------------------------------------------------------------
+
+def _path_ell_sampled_oracles(name):
+    """Global ELL, jax path: the rowloop executor (what backend="jax"
+    serves) against the independent einsum oracle, per strategy, both a
+    truncating and a covering width."""
+    g, x, want = _case(name)
+    for strategy in ("aes", "afs", "sfs"):
+        for w in (4, _wmax(g) + 3):
+            ell = sample(g, w, strategy)
+            _close(ref.ell_spmm_rowloop(ell.val, ell.col, x),
+                   ref.ell_spmm(ell.val, ell.col, x),
+                   label=f"{strategy}-w{w}")
+            if w > _wmax(g):     # no truncation: exact aggregation
+                _close(ref.ell_spmm_rowloop(ell.val, ell.col, x), want,
+                       rtol=1e-4, atol=1e-4,
+                       label=f"{strategy}-w{w}-vs-dense")
+
+
+def _path_ell_full(name):
+    """strategy="full" pads to max nnz — exact on every backend."""
+    g, x, want = _case(name)
+    ell = pad_csr_to_ell(g)
+    _close(ref.ell_spmm_rowloop(ell.val, ell.col, x), want,
+           rtol=1e-4, atol=1e-4)
+    _close(ops.ell_spmm(ell, x), want, rtol=1e-4, atol=1e-4)
+
+
+def _path_ell_pallas(name):
+    """Global ELL, Pallas kernel vs the rowloop oracle on the identical
+    sampled operand (truncating and covering widths)."""
+    g, x, _ = _case(name)
+    for strategy in ("aes", "sfs"):
+        for w in (4, _wmax(g) + 3):
+            ell = sample(g, w, strategy)
+            _close(ops.ell_spmm(ell, x),
+                   ref.ell_spmm_rowloop(ell.val, ell.col, x),
+                   label=f"{strategy}-w{w}")
+
+
+def _path_ell_pallas_quant(name):
+    """Global ELL with the fused-dequant gather vs dequantize-then-rowloop."""
+    g, x, _ = _case(name)
+    qf = quantize(np.asarray(x), 8)
+    ell = sample(g, 4, "aes")
+    got = ops.ell_spmm(ell, qf.q, quantized_meta=(qf.scale, qf.x_min))
+    oracle = ref.ell_spmm_rowloop(ell.val, ell.col, dequantize(qf))
+    _close(got, oracle, rtol=1e-4, atol=float(qf.scale) * 0.5 + 1e-5)
+
+
+def _path_fused_pallas(name):
+    """Single-kernel sample+SpMM vs the end-to-end AES oracle."""
+    g, x, want = _case(name)
+    for w in (4, _wmax(g) + 3):
+        _close(ops.fused_aes_spmm(g, x, w),
+               ref.aes_spmm(g.row_ptr, g.col_ind, g.val, x, w),
+               label=f"fused-w{w}")
+    _close(ops.fused_aes_spmm(g, x, _wmax(g) + 3), want,
+           rtol=1e-4, atol=1e-4, label="fused-vs-dense")
+
+
+def _path_block_full_coverage(name):
+    """BlockELL with per-block exact padding equals the dense ground truth
+    at adversarial block sizes (1 row, non-dividing, larger than graph)."""
+    g, x, want = _case(name)
+    for block_rows in (1, 16, g.num_rows + 1):
+        n = max(-(-g.num_rows // block_rows), 1)
+        bell = sample_csr_to_block_ell(g, [("full", 0)] * n, block_rows)
+        _close(ref.block_ell_spmm(bell, x), want, rtol=1e-4, atol=1e-4,
+               label=f"jax-br{block_rows}")
+        _close(ops.block_ell_spmm(bell, x), want, rtol=1e-4, atol=1e-4,
+               label=f"pallas-br{block_rows}")
+
+
+def _path_block_backend_parity(name):
+    """Truncating mixed-strategy BlockELL: Pallas block kernel vs the
+    per-segment rowloop oracle, across every bucket partition the tuner
+    could pick."""
+    g, x, _ = _case(name)
+    n = max(-(-g.num_rows // 8), 1)
+    bell = sample_csr_to_block_ell(g, _mixed_configs(n), 8)
+    oracle = ref.block_ell_spmm(bell, x)
+    _close(ops.block_ell_spmm(bell, x), oracle, label="default-buckets")
+    for k in (1, 2, 3):
+        buckets = partition_width_buckets(bell.widths, k)
+        _close(ops.block_ell_spmm(bell, x, buckets=buckets), oracle,
+               label=f"buckets-{k}")
+
+
+def _path_block_quant(name):
+    """Quantized BlockELL: the fused dequantize-then-aggregate kernel vs
+    the dequantize-then-SpMM oracle, and the oracle itself vs the dense
+    ground truth of the reconstruction under full coverage."""
+    g, x, _ = _case(name)
+    qf = quantize(np.asarray(x), 8)
+    n = max(-(-g.num_rows // 8), 1)
+    bell = sample_csr_to_block_ell(g, _mixed_configs(n), 8)
+    oracle = ref.quant_block_ell_spmm(bell, qf)
+    got = ops.block_ell_spmm(bell, qf.q, quantized_meta=(qf.scale, qf.x_min))
+    _close(got, oracle, rtol=1e-4, atol=float(qf.scale) * 0.5 + 1e-5)
+    full = sample_csr_to_block_ell(
+        g, [("full", 0)] * max(-(-g.num_rows // 16), 1), 16)
+    _close(ref.quant_block_ell_spmm(full, qf),
+           np.asarray(csr_to_dense(g)) @ np.asarray(dequantize(qf)),
+           rtol=1e-4, atol=1e-4, label="quant-oracle-vs-dense")
+
+
+def _path_auto_graph(name):
+    """aes_spmm(strategy="auto"): with every candidate width covering, the
+    tuned global plan equals the dense ground truth."""
+    g, x, want = _case(name)
+    w = _wmax(g)
+    cache = PlanCache()
+    got = aes_spmm(g, x, strategy="auto", plan_cache=cache,
+                   tune_kwargs=dict(widths=(w, 2 * w), budget=2,
+                                    warmup=0, iters=1))
+    _close(got, want, rtol=1e-4, atol=1e-4)
+    assert len(cache.plans()) == 1
+
+
+def _path_auto_block(name):
+    """aes_spmm(strategy="auto", granularity="block") on both backends."""
+    g, x, want = _case(name)
+    for backend in ("jax", "pallas"):
+        cache = PlanCache()
+        got = aes_spmm(g, x, strategy="auto", granularity="block",
+                       plan_cache=cache,
+                       tune_kwargs=_exact_tune_kwargs(
+                           g, block_rows=16, backend=backend,
+                           measure_buckets=False))
+        assert cache.plans()[0].backend == backend
+        _close(got, want, rtol=1e-4, atol=1e-4, label=backend)
+
+
+def _path_auto_block_quant(name):
+    """Quantized auto-block on both backends and adversarial block sizes
+    (one-row blocks, one oversize block): deviation from the dense float
+    ground truth is bounded by the Eq. 1/2 reconstruction error."""
+    g, x, want = _case(name)
+    for backend in ("jax", "pallas"):
+        for block_rows in (1, 16, g.num_rows + 1):
+            cache = PlanCache()
+            got = aes_spmm(g, x, strategy="auto", granularity="block",
+                           plan_cache=cache,
+                           tune_kwargs=_exact_tune_kwargs(
+                               g, block_rows=block_rows, backend=backend,
+                               quant=8, measure_buckets=False))
+            plan = cache.plans()[0]
+            assert plan.quantized is not None
+            assert plan.quantized.q.dtype == jnp.uint8
+            err = np.abs(np.asarray(got) - want)
+            bound = _quant_bound(g, float(plan.quantized.scale))
+            assert (err <= bound).all(), \
+                (f"{backend}-br{block_rows}: max err {err.max()} "
+                 f"vs bound {bound.min()}")
+
+
+def _path_serve_loop(name):
+    """Sharded loop engine vs the exact CSR SpMM for shard counts that
+    divide the rows and counts that don't."""
+    g, x, want = _case(name)
+    for num_shards in (1, 2, 4):
+        server = GNNServer(g, x, num_shards=num_shards, cache=PlanCache(),
+                           tune_kwargs=_exact_tune_kwargs(g))
+        _close(server.aggregate(), want, label=f"shards-{num_shards}")
+
+
+def _path_serve_loop_quant(name):
+    """Quantized sharded serving within the per-shard quantization bound."""
+    g, x, want = _case(name)
+    server = GNNServer(g, x, num_shards=3, quant=8, cache=PlanCache(),
+                       tune_kwargs=_exact_tune_kwargs(g))
+    assert all(p.quantized is not None and p.quantized.bits == 8
+               for p in server.plans)
+    got = np.asarray(server.aggregate())
+    max_scale = max((float(p.quantized.scale) for p in server.plans),
+                    default=0.0)
+    bound = _quant_bound(g, max_scale)
+    assert (np.abs(got - want) <= bound).all()
+
+
+def _path_serve_spmd(name):
+    """The shard_map engine (single in-process device; multi-device parity
+    runs in test_serving.py's forced-host-device subprocesses)."""
+    g, x, want = _case(name)
+    server = GNNServer(g, x, num_shards=1, mode="spmd", cache=PlanCache(),
+                       tune_kwargs=_exact_tune_kwargs(g))
+    _close(server.aggregate(), want)
+
+
+def _path_serve_matches_block_plan(name):
+    """Sharded output == the single-device blocked plan, same knobs."""
+    g, x, _ = _case(name)
+    tk = _exact_tune_kwargs(g)
+    want = aes_spmm(g, x, strategy="auto", granularity="block",
+                    plan_cache=PlanCache(), tune_kwargs=tk)
+    server = GNNServer(g, x, num_shards=4, cache=PlanCache(),
+                       tune_kwargs=tk)
+    _close(server.aggregate(), want)
+
+
+_PATHS = {
+    "ell-jax-sampled": _path_ell_sampled_oracles,
+    "ell-full": _path_ell_full,
+    "ell-pallas": _path_ell_pallas,
+    "ell-pallas-quant": _path_ell_pallas_quant,
+    "fused-pallas": _path_fused_pallas,
+    "block-full-coverage": _path_block_full_coverage,
+    "block-backend-parity": _path_block_backend_parity,
+    "block-quant": _path_block_quant,
+    "auto-graph": _path_auto_graph,
+    "auto-block": _path_auto_block,
+    "auto-block-quant": _path_auto_block_quant,
+    "serve-loop": _path_serve_loop,
+    "serve-loop-quant": _path_serve_loop_quant,
+    "serve-spmd": _path_serve_spmd,
+    "serve-vs-block": _path_serve_matches_block_plan,
+}
+
+
+@pytest.mark.parametrize("path", sorted(_PATHS))
+@pytest.mark.parametrize("graph", sorted(_GRAPHS))
+def test_conformance(graph, path):
+    _PATHS[path](graph)
+
+
+def test_grid_is_adversarial():
+    """The graph grid actually contains the adversarial shapes the paths
+    claim to be tested against (guards against a future 'simplification'
+    quietly defanging the harness)."""
+    g_empty, _, w_empty = _case("empty")
+    assert g_empty.nnz == 0 and np.abs(w_empty).max() == 0.0
+    g_er, _, _ = _case("empty_rows")
+    row_nnz = np.asarray(g_er.row_nnz())
+    assert (row_nnz == 0).sum() >= 20
+    g_dr, _, _ = _case("dense_row")
+    nnz = np.asarray(g_dr.row_nnz())
+    assert nnz.max() >= 100 > 10 * np.median(nnz)
+    g_rg, _, _ = _case("ragged70")
+    assert g_rg.num_rows % 4 != 0 and g_rg.num_rows % 16 != 0

@@ -4,13 +4,14 @@ Property tests (hypothesis — run for real in CI, skip-shimmed locally when
 the package is absent): Eq. 1/2 round-trip error <= scale/2 elementwise;
 the fused dequantize-then-aggregate ``block_ell_spmm`` against the
 dequantize-then-SpMM oracle; width-bucket partitions are permutations of
-the blocks.  Deterministic acceptance tests: quantized
-``aes_spmm(strategy="auto", granularity="block")`` vs the dense float
-reference on every ``test_block_ell.py`` block-size case; the quantized
-``BlockedPlan`` plan-cache round trip (memory + disk, pre-PR-3 entries
-rejected by the schema bump); the bounded disk tier
-(``$REPRO_PLAN_CACHE_DISK_MAX``); the >= 2x feature-bytes reduction; and
-the end-to-end <= 0.3% accuracy-regression gate (paper §4.2.3).
+the blocks.  Deterministic acceptance tests: the quantized ``BlockedPlan``
+plan-cache round trip (memory + disk, pre-PR-3 entries rejected by the
+schema bump); the bounded disk tier (``$REPRO_PLAN_CACHE_DISK_MAX``); the
+>= 2x feature-bytes reduction; and the end-to-end <= 0.3%
+accuracy-regression gate (paper §4.2.3).  The quantized parity loops that
+used to live here (quantized auto-block vs dense across block sizes,
+quantized jax-vs-pallas backend parity) moved into the unified harness in
+``tests/test_conformance.py``.
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aes_spmm import aes_spmm
-from repro.core.graph import csr_to_dense, partition_width_buckets
+from repro.core.graph import partition_width_buckets
 from repro.core.quantization import as_quantized, dequantize, quantize
 from repro.core.sampling import sample_csr_to_block_ell
 from repro.kernels import ops, ref
@@ -102,62 +103,6 @@ def test_width_buckets_from_random_degree_plans(rng):
         ids = [i for _, grp in plan.buckets for i in grp]
         assert sorted(ids) == list(range(plan.bell.num_blocks))
         assert len(plan.buckets) <= 3
-
-
-# ---------------------------------------------------------------------------
-# acceptance gate: quantized auto-block vs dense float reference
-# ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("num_rows,block_rows", [
-    (48, 1),          # one block per row
-    (300, 256),       # multiple blocks, ragged tail
-    (300, 4096),      # block larger than the graph -> single block
-    (300, 301),       # block_rows > num_rows by one
-])
-def test_quant_auto_block_matches_dense_within_quant_tolerance(
-        num_rows, block_rows):
-    """With every candidate width >= max row nnz the tuned plan covers all
-    edges, so the only deviation from the dense float reference is Eq. 1/2
-    reconstruction error — bounded per output row by
-    ``sum_k |A[r, k]| * scale/2``."""
-    rng = np.random.default_rng(num_rows * 31 + block_rows)
-    g = random_csr(rng, num_rows, 5.0, skew=0.8)
-    wmax = int(np.asarray(g.row_nnz()).max())
-    x = rng.normal(size=(num_rows, 16)).astype(np.float32)
-    want = np.asarray(csr_to_dense(g) @ jnp.asarray(x))
-
-    for backend in ("jax", "pallas"):
-        cache = PlanCache()
-        got = aes_spmm(g, jnp.asarray(x), strategy="auto",
-                       granularity="block", plan_cache=cache,
-                       tune_kwargs=dict(block_rows=block_rows,
-                                        widths=(wmax, 2 * wmax),
-                                        backend=backend, quant=8,
-                                        measure_buckets=False,
-                                        warmup=0, iters=1))
-        plan = cache.plans()[0]
-        assert plan.quantized is not None
-        assert plan.quantized.q.dtype == jnp.uint8
-        scale = float(plan.quantized.scale)
-        bound = (np.abs(np.asarray(csr_to_dense(g))).sum(axis=1, keepdims=True)
-                 * scale / 2 + 1e-4)
-        err = np.abs(np.asarray(got) - want)
-        assert (err <= bound).all(), \
-            f"{backend}: max err {err.max()} vs bound {bound.min()}"
-
-
-def test_quant_blocked_jax_and_pallas_agree(rng):
-    """Backend parity on a truncating quantized mixed-width plan."""
-    g = random_csr(rng, 41, 6.0, skew=0.7)
-    x = rng.normal(size=(41, 20)).astype(np.float32)
-    qf = quantize(x, 8)
-    configs = [("aes", 8), ("sfs", 4), ("afs", 16), ("full", 0), ("aes", 2),
-               ("sfs", 32)]
-    bell = sample_csr_to_block_ell(g, configs, 8)
-    a = ref.quant_block_ell_spmm(bell, qf)
-    b = ops.block_ell_spmm(bell, qf.q, quantized_meta=(qf.scale, qf.x_min))
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                               rtol=1e-5, atol=1e-5)
 
 
 def test_as_quantized_reuses_matching_operand(rng):

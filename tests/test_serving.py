@@ -1,12 +1,13 @@
 """Sharded serving subsystem tests (repro.serving).
 
-Covers the ISSUE's required cases: shard parity with the single-device
-dense reference (and the ``granularity="block"`` path) for 1/2/4 shards
-including a non-dividing row count — in-process on the launch loop, and
-in subprocesses with 1/2/4 *forced host devices* for the shard_map path —
-plus partition/halo correctness, the ``(fingerprint, kind, shard_meta)``
-cache keying with the v4 schema gate, the pure-cache-hit warm restart,
-micro-batching, and the ``gnn.evaluate(shards=N)`` parity path.
+Covers partition/halo correctness, bit-exact integer parity, subprocess
+parity with 1/2/4 *forced host devices* for the shard_map path, the
+``(fingerprint, kind, shard_meta)`` cache keying with the v4 schema gate,
+the pure-cache-hit warm restart, micro-batching, and the
+``gnn.evaluate(shards=N)`` parity path.  The in-process shard-vs-dense /
+shard-vs-blocked / quantized-tolerance parity loops that used to live here
+moved into the unified conformance harness (``tests/test_conformance.py``),
+which runs loop and spmd engines over a shared adversarial graph grid.
 """
 from __future__ import annotations
 
@@ -93,18 +94,6 @@ def test_partition_gather_builds_shard_operand(rng):
 # shard parity (launch loop, in-process)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("num_shards", [1, 2, 4])
-def test_sharded_engine_matches_dense_reference(rng, num_shards):
-    """Engine output == single-device dense reference — including a graph
-    whose 70 rows don't divide the 4-way shard count."""
-    g = random_csr(rng, 70, 6.0, skew=0.9)
-    x = jnp.asarray(rng.normal(size=(70, 12)).astype(np.float32))
-    server = GNNServer(g, x, num_shards=num_shards, cache=PlanCache(),
-                       tune_kwargs=_exact_tk(g))
-    got = np.asarray(server.aggregate())
-    np.testing.assert_allclose(got, _dense_ref(g, x), rtol=1e-5, atol=1e-5)
-
-
 @pytest.mark.parametrize("num_shards", [2, 4])
 def test_sharded_engine_bit_exact_on_integer_inputs(rng, num_shards):
     """Float plans, integer-valued inputs: every accumulation is exact in
@@ -115,40 +104,6 @@ def test_sharded_engine_bit_exact_on_integer_inputs(rng, num_shards):
                        tune_kwargs=_exact_tk(g))
     np.testing.assert_array_equal(np.asarray(server.aggregate()),
                                   _dense_ref(g, x))
-
-
-def test_sharded_engine_matches_block_path(rng):
-    """Sharded vs the single-device granularity="block" plan, same knobs."""
-    from repro.core.aes_spmm import aes_spmm
-
-    g = random_csr(rng, 70, 6.0, skew=0.9)
-    x = jnp.asarray(rng.normal(size=(70, 12)).astype(np.float32))
-    tk = _exact_tk(g)
-    want = aes_spmm(g, x, strategy="auto", granularity="block",
-                    plan_cache=PlanCache(), tune_kwargs=tk)
-    server = GNNServer(g, x, num_shards=4, cache=PlanCache(),
-                       tune_kwargs=tk)
-    np.testing.assert_allclose(np.asarray(server.aggregate()),
-                               np.asarray(want), rtol=1e-5, atol=1e-5)
-
-
-def test_quantized_shards_within_quant_tolerance(rng):
-    g = random_csr(rng, 48, 5.0, weighted=False)
-    x = jnp.asarray(rng.normal(size=(48, 8)).astype(np.float32))
-    server = GNNServer(g, x, num_shards=3, quant=8, cache=PlanCache(),
-                       tune_kwargs=_exact_tk(g))
-    assert all(p.quantized is not None and p.quantized.bits == 8
-               for p in server.plans)
-    got = np.asarray(server.aggregate())
-    want = _dense_ref(g, x)
-    # per-element reconstruction error <= scale/2; rows sum |A| * err
-    max_scale = max(float(p.quantized.scale) for p in server.plans)
-    rp = np.asarray(g.row_ptr)
-    rowsum = np.bincount(
-        np.repeat(np.arange(g.num_rows), rp[1:] - rp[:-1]),
-        weights=np.abs(np.asarray(g.val)), minlength=g.num_rows)
-    atol = 0.5 * max_scale * rowsum.max(initial=0.0) + 1e-5
-    assert np.max(np.abs(got - want)) <= atol
 
 
 def test_micro_batching_flush(rng):

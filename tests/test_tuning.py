@@ -202,8 +202,9 @@ def test_refine_ranks_by_measured_score_not_raw_latency(monkeypatch):
     slow_accurate = CandidateConfig("aes", 128)
     canned_us = {fast_biased: 100.0, slow_accurate: 150.0}
 
-    def fake_measure(csr, features, cfg, *, warmup, iters):
-        return Measurement(config=cfg, spmm_us=canned_us[cfg], sample_us=0.0)
+    def fake_measure(csr, features, cfg, *, warmup, iters, **kw):
+        return Measurement(config=cfg, spmm_us=canned_us[cfg], sample_us=0.0,
+                           estimate=kw.get("estimate"))
 
     monkeypatch.setattr(measure_mod, "measure_config", fake_measure)
     ests = [
