@@ -23,6 +23,8 @@ def main() -> None:
     block_tuning_gain.run()
     quant_block_gain.run()
     calibration_gain.run()
+    # includes the open-loop continuous-batching sweep (ServingRuntime
+    # vs synchronous flush under Poisson arrivals -> BENCH_serving.json)
     serving_throughput.run()
     try:
         from benchmarks import roofline

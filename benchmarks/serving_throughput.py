@@ -1,4 +1,5 @@
-"""Sharded serving throughput: `GNNServer` vs the single-device path.
+"""Sharded serving throughput: `GNNServer` vs the single-device path,
+plus the open-loop continuous-batching sweep.
 
 Rows:
   * ``serving/<ds>/single``       — warm single-device blocked plan
@@ -8,7 +9,13 @@ Rows:
     with double-buffered dispatch;
   * ``serving/<ds>/batch<S>x<B>`` — B micro-batched float requests in one
     ``flush()`` vs B sequential ``aggregate()`` calls (the SpMM
-    column-concat win).
+    column-concat win);
+  * ``serving/openloop/...``      — Poisson open-loop offered-load sweep
+    through the async ``ServingRuntime`` (continuous batching, two-slot
+    device pipeline) vs the per-request synchronous ``flush()`` baseline:
+    achieved rows/s + p99 at each offered rate, and the highest rate the
+    runtime *sustains* (no sheds, p99 under the bound) — the ISSUE-6
+    acceptance gate is ``runtime_sustained_rps > sync_rps``.
 
 Derived fields report tok-equivalent ``rows_s`` (output rows produced per
 second — rows x requests / wall time) and the halo expansion the
@@ -23,11 +30,80 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.serving import GNNServer
+from repro.serving import GNNServer, ServingRuntime, run_open_loop, \
+    sync_baseline
 from repro.tuning import PlanCache
 from repro.tuning.autotune import tune_blocked
 
 SUMMARY_PATH = Path("BENCH_serving.json")
+
+
+def open_loop_sweep(dataset: str = "cora", scale: float = 0.2,
+                    shards: int = 2, rate_multipliers=(0.5, 1.0, 2.0, 4.0),
+                    requests_per_rate: int = 48, max_batch: int = 16,
+                    max_delay_ms: float = 4.0,
+                    p99_bound_x: float = 25.0) -> dict:
+    """Offered-load sweep: the continuous-batching runtime vs per-request
+    synchronous ``flush()`` under Poisson arrivals.
+
+    The sync baseline's closed-loop rate (1 / mean request latency) is the
+    load beyond which a synchronous server necessarily falls behind; the
+    sweep offers multiples of it to the runtime (``policy="reject"`` so
+    the loop stays open and overload sheds) and reports the highest rate
+    sustained with zero sheds and p99 <= ``p99_bound_x`` x the sync
+    median.
+    """
+    from repro.gnn.datasets import make_dataset
+
+    ds = make_dataset(dataset, scale=scale, seed=1)
+    g, feats = ds.gcn_adj, ds.features
+    server = GNNServer(g, feats, num_shards=shards, cache=PlanCache(),
+                       tune_kwargs=dict(measure_plan=False))
+    base = sync_baseline(server, iters=16, warmup=3)
+    emit(f"serving/openloop/{dataset}/sync", base["mean_us"],
+         f"rps={base['rps']:.1f},p99_ms={base['p99_ms']}")
+
+    p99_bound_ms = max(p99_bound_x * base["p50_ms"], 5.0)
+    sweep, sustained = [], 0.0
+    for rx in rate_multipliers:
+        rate = base["rps"] * rx
+        rt = ServingRuntime(server, max_batch=max_batch,
+                            max_delay_ms=max_delay_ms,
+                            queue_depth=4 * max_batch, policy="reject")
+        try:
+            res = run_open_loop(rt, rate_rps=rate,
+                                num_requests=requests_per_rate,
+                                seed=int(rx * 10))
+        finally:
+            rt.close()
+        res["rate_x_sync"] = rx
+        res["sustained"] = (res["rejected"] == 0 and res["failed"] == 0
+                            and res["p99_ms"] <= p99_bound_ms)
+        if res["sustained"]:
+            sustained = max(sustained, rate)
+        sweep.append(res)
+        emit(f"serving/openloop/{dataset}/x{rx:g}",
+             res["p99_ms"] * 1e3,
+             f"offered_rps={res['offered_rps']},"
+             f"achieved_rps={res['achieved_rps']},"
+             f"rows_s={res['rows_per_s']:.0f},"
+             f"shed={res['rejected']},"
+             f"sustained={res['sustained']}")
+
+    out = {
+        "dataset": dataset, "nodes": g.num_rows, "edges": g.nnz,
+        "shards": shards, "max_batch": max_batch,
+        "max_delay_ms": max_delay_ms,
+        "sync_rps": base["rps"], "sync_p50_ms": base["p50_ms"],
+        "sync_p99_ms": base["p99_ms"], "p99_bound_ms": round(p99_bound_ms, 3),
+        "runtime_sustained_rps": round(sustained, 2),
+        "runtime_beats_sync": sustained > base["rps"],
+        "sweep": sweep,
+    }
+    emit(f"serving/openloop/{dataset}/sustained", 0.0,
+         f"runtime_rps={sustained:.1f},sync_rps={base['rps']:.1f},"
+         f"beats_sync={out['runtime_beats_sync']}")
+    return out
 
 
 def run(datasets=(("cora", 0.3), ("ogbn-arxiv", 0.01)),
@@ -84,6 +160,7 @@ def run(datasets=(("cora", 0.3), ("ogbn-arxiv", 0.01)),
 
         summary["datasets"][name] = entry
 
+    summary["open_loop"] = open_loop_sweep()
     SUMMARY_PATH.write_text(json.dumps(summary, indent=2))
     emit("serving/summary", 0.0, f"json={SUMMARY_PATH}")
     return summary

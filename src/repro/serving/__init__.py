@@ -14,18 +14,35 @@ multi-device serving engine:
   * ``engine`` — :class:`GNNServer` with ``submit()``/``flush()``
     micro-batching, per-shard width-bucketed launches (loop mode with
     double-buffered operand dispatch, or one ``jax.shard_map`` program),
-    and uint8 feature dispatch when the plans are quantized;
-  * ``server`` — the CLI: ``python -m repro.serving.server --smoke``.
+    uint8 feature dispatch when the plans are quantized, and the
+    non-blocking ``run_batch()`` dispatch path;
+  * ``runtime`` — :class:`ServingRuntime`: the async continuous-batching
+    request loop (bounded queue with backpressure, size-or-deadline
+    flush, two-slot device pipeline, graceful drain) over the engine;
+  * ``telemetry`` — per-request latency histograms (p50/p95/p99 per
+    stage) and batch/queue counters;
+  * ``traffic`` — open-loop Poisson traffic generation + the
+    synchronous-baseline comparator;
+  * ``server`` / ``runtime`` CLIs: ``python -m repro.serving.server
+    --smoke`` and ``python -m repro.serving.runtime --smoke|--bench``.
 
-See ``docs/architecture.md`` ("Sharded serving") for the data flow.
+See ``docs/architecture.md`` ("Sharded serving", "Serving runtime") for
+the data flow.
 """
 from repro.serving.engine import GNNServer
 from repro.serving.partition import (CSRShard, concat_shard_outputs,
                                      halo_stats, partition_csr, row_bounds)
 from repro.serving.plans import plan_shard, plan_shards, shard_meta_for
+from repro.serving.runtime import (BackpressureError, RuntimeRequest,
+                                   ServingRuntime)
+from repro.serving.telemetry import LatencyHistogram, Telemetry
+from repro.serving.traffic import (poisson_arrivals, run_open_loop,
+                                   sync_baseline)
 
 __all__ = [
-    "CSRShard", "GNNServer", "concat_shard_outputs", "halo_stats",
-    "partition_csr", "plan_shard", "plan_shards", "row_bounds",
-    "shard_meta_for",
+    "BackpressureError", "CSRShard", "GNNServer", "LatencyHistogram",
+    "RuntimeRequest", "ServingRuntime", "Telemetry",
+    "concat_shard_outputs", "halo_stats", "partition_csr", "plan_shard",
+    "plan_shards", "poisson_arrivals", "row_bounds", "run_open_loop",
+    "shard_meta_for", "sync_baseline",
 ]

@@ -34,7 +34,10 @@ whole queue in as few sharded passes as possible — SpMM is linear in the
 dense operand's columns, so all float requests are served by **one**
 column-concatenated pass, and requests for the graph's own feature matrix
 (``x=None``) dedupe into a single pass over the cached (possibly
-quantized) per-shard operands.
+quantized) per-shard operands.  ``run_batch()`` is the same execution
+path without the queue and without blocking on the device — the
+non-blocking dispatch surface the continuous-batching runtime
+(``repro.serving.runtime``) pipelines batches through.
 """
 from __future__ import annotations
 
@@ -305,43 +308,83 @@ class GNNServer:
                 if p.quantized is not None else p for p in self.plans]
 
         self._queue: list = []
+        self._closed = False
         self.stats = {"requests": 0, "flushes": 0, "sharded_passes": 0,
                       "rows_served": 0}
 
     # -- submission ------------------------------------------------------
 
+    def validate_operand(self, x):
+        """Validate one request operand at enqueue time, returning its
+        ``float32`` view (``None`` passes through: the cached features).
+
+        Rejections happen here — before the request is admitted — with a
+        ``ValueError`` naming the problem, instead of a shape/dtype error
+        surfacing deep inside the batched sharded pass (where it would
+        take the whole micro-batch down with it): a closed server, a
+        non-2D operand, a feature-dim (node-count) mismatch, or a
+        non-real dtype (complex/object/strings cannot be aggregated).
+        """
+        if self._closed:
+            raise ValueError("server is closed (no further submissions)")
+        if x is None:
+            return None
+        dtype = getattr(x, "dtype", None)
+        if dtype is None:
+            x = np.asarray(x)
+            dtype = x.dtype
+        if not (np.issubdtype(dtype, np.floating)
+                or np.issubdtype(dtype, np.integer)
+                or np.issubdtype(dtype, np.bool_)):
+            raise ValueError(
+                f"operand dtype {dtype} is not a real numeric dtype "
+                "(expected float/int/bool, castable to float32)")
+        if getattr(x, "ndim", None) != 2:
+            raise ValueError(
+                f"operand must be 2-D [num_nodes, F], got ndim="
+                f"{getattr(x, 'ndim', None)}")
+        if int(x.shape[0]) != int(self.features.shape[0]):
+            raise ValueError(
+                f"operand shape {tuple(x.shape)} does not match "
+                f"[num_nodes={self.features.shape[0]}, F]")
+        return jnp.asarray(x, jnp.float32)
+
     def submit(self, x=None) -> int:
         """Enqueue a request; returns its ticket (index into the next
-        ``flush()`` result list)."""
-        if x is not None:
-            x = jnp.asarray(x, jnp.float32)
-            if x.ndim != 2 or x.shape[0] != self.features.shape[0]:
-                raise ValueError(
-                    f"operand shape {tuple(x.shape)} does not match "
-                    f"[num_nodes={self.features.shape[0]}, F]")
+        ``flush()`` result list).  Invalid operands and post-``close()``
+        submissions raise ``ValueError`` here, at enqueue time."""
+        x = self.validate_operand(x)
         ticket = len(self._queue)
         self._queue.append(x)
         return ticket
 
-    def flush(self) -> list:
-        """Execute the queued micro-batch; returns one ``[num_rows, F_i]``
-        result per ticket, in submission order.
+    def run_batch(self, batch: Sequence) -> list:
+        """Execute one micro-batch of operands *without blocking on the
+        device*: returns one asynchronously-dispatched ``[num_rows, F_i]``
+        array per entry, in order (jax arrays are futures until forced —
+        callers that need host values ``block_until_ready``).
 
-        All float requests ride one column-concatenated sharded pass
-        (SpMM is linear in B's columns); ``x=None`` requests dedupe into
-        one pass over the cached per-shard operands.
+        This is the engine's non-blocking dispatch path: ``flush()`` is a
+        thin wrapper over it, and the continuous-batching runtime
+        (``repro.serving.runtime``) calls it directly so the next batch
+        can be assembled while this one is still on device.
+
+        All float operands ride one column-concatenated sharded pass
+        (SpMM is linear in B's columns); ``None`` entries (the server's
+        own feature matrix) dedupe into one pass over the cached —
+        possibly quantized — per-shard operands.
         """
-        queue, self._queue = self._queue, []
-        if not queue:
+        batch = list(batch)
+        if not batch:
             return []
-        self.stats["requests"] += len(queue)
+        self.stats["requests"] += len(batch)
         self.stats["flushes"] += 1
 
-        results: list = [None] * len(queue)
-        dense = [(t, x) for t, x in enumerate(queue) if x is not None]
-        if any(x is None for x in queue):
+        results: list = [None] * len(batch)
+        dense = [(t, x) for t, x in enumerate(batch) if x is not None]
+        if any(x is None for x in batch):
             out = self._run(None)
-            for t, x in enumerate(queue):
+            for t, x in enumerate(batch):
                 if x is None:
                     results[t] = out
         if dense:
@@ -353,7 +396,21 @@ class GNNServer:
                 results[t] = cat[:, off:off + w]
                 off += w
         self.stats["rows_served"] += \
-            int(self.features.shape[0]) * len(queue)
+            int(self.features.shape[0]) * len(batch)
+        return results
+
+    def flush(self) -> list:
+        """Execute the queued micro-batch; returns one ``[num_rows, F_i]``
+        result per ticket, in submission order (see :meth:`run_batch`)."""
+        queue, self._queue = self._queue, []
+        return self.run_batch(queue)
+
+    def close(self) -> list:
+        """Drain: execute any pending micro-batch, then refuse further
+        submissions (``submit`` raises ``ValueError``).  Returns the
+        drained results (empty when nothing was pending).  Idempotent."""
+        results = self.flush() if self._queue else []
+        self._closed = True
         return results
 
     def aggregate(self, x=None):

@@ -1,0 +1,200 @@
+"""Per-request latency telemetry for the serving runtime.
+
+The runtime (``repro.serving.runtime``) stamps every request four times —
+enqueue, flush (batch dispatch), device-ready, complete — and hands the
+finished request here.  This module turns those stamps into the numbers a
+serving operator actually watches:
+
+  * stage histograms — ``queue`` (enqueue -> flush: how long admission
+    control and the size-or-deadline batcher held the request), ``device``
+    (flush -> complete: dispatch + on-device time for the request's
+    batch), ``total`` (enqueue -> complete);
+  * tail percentiles (p50/p95/p99) per stage, read from log-spaced bucket
+    histograms so a million requests cost a few KB, not a sample buffer;
+  * counters — submitted / completed / failed / rejected requests,
+    batches flushed (split by size- vs deadline- vs drain-triggered),
+    rows served, queue high-water mark, mean batch occupancy.
+
+Everything is thread-safe (the batcher, completer, and submitting threads
+all report concurrently) and cheap enough to leave on: recording one
+request is a handful of integer increments under one lock.
+
+``Telemetry.snapshot()`` is the export surface — a plain JSON-able dict —
+used by ``python -m repro.serving.runtime --smoke|--bench`` and the
+open-loop benchmark (``benchmarks/serving_throughput.py``).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Optional
+
+__all__ = ["LatencyHistogram", "Telemetry"]
+
+
+class LatencyHistogram:
+    """Fixed-memory latency histogram with log-spaced buckets.
+
+    Buckets span ``[lo_us, hi_us)`` with ``per_decade`` buckets per decade
+    (default: 1us .. 1000s at 8/decade = 72 buckets); underflow clamps
+    into the first bucket, overflow into the last.  Percentiles are read
+    back with log-linear interpolation inside the hit bucket, which keeps
+    the p99 honest to within one bucket's ratio (~33% at 8/decade) while
+    the exact min/max/mean are tracked separately.
+    """
+
+    def __init__(self, lo_us: float = 1.0, hi_us: float = 1e9,
+                 per_decade: int = 8):
+        if not (0 < lo_us < hi_us):
+            raise ValueError(f"need 0 < lo_us < hi_us, got {lo_us}, {hi_us}")
+        self.lo_us = float(lo_us)
+        self.hi_us = float(hi_us)
+        decades = math.log10(hi_us / lo_us)
+        self.num_buckets = max(int(math.ceil(decades * per_decade)), 1)
+        self._log_lo = math.log10(lo_us)
+        self._scale = self.num_buckets / decades   # buckets per log10 unit
+        self.counts = [0] * self.num_buckets
+        self.count = 0
+        self.sum_us = 0.0
+        self.min_us = math.inf
+        self.max_us = 0.0
+
+    def _bucket(self, us: float) -> int:
+        if us <= self.lo_us:
+            return 0
+        idx = int((math.log10(us) - self._log_lo) * self._scale)
+        return min(idx, self.num_buckets - 1)
+
+    def _edges(self, idx: int) -> tuple[float, float]:
+        lo = 10.0 ** (self._log_lo + idx / self._scale)
+        hi = 10.0 ** (self._log_lo + (idx + 1) / self._scale)
+        return lo, hi
+
+    def record(self, us: float) -> None:
+        us = float(us)
+        if not (us >= 0.0 and math.isfinite(us)):
+            return
+        self.counts[self._bucket(us)] += 1
+        self.count += 1
+        self.sum_us += us
+        self.min_us = min(self.min_us, us)
+        self.max_us = max(self.max_us, us)
+
+    def percentile(self, p: float) -> float:
+        """The ``p``-th percentile (0..100) in microseconds, log-linearly
+        interpolated inside the hit bucket and clamped to the observed
+        min/max; 0.0 on an empty histogram."""
+        if self.count == 0:
+            return 0.0
+        target = max(min(p, 100.0), 0.0) / 100.0 * self.count
+        seen = 0
+        for idx, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if seen + c >= target:
+                frac = (target - seen) / c
+                lo, hi = self._edges(idx)
+                us = 10.0 ** (math.log10(lo)
+                              + frac * (math.log10(hi) - math.log10(lo)))
+                return float(min(max(us, self.min_us), self.max_us))
+            seen += c
+        return float(self.max_us)
+
+    @property
+    def mean_us(self) -> float:
+        return self.sum_us / self.count if self.count else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "mean_us": round(self.mean_us, 1),
+            "min_us": round(self.min_us, 1) if self.count else 0.0,
+            "p50_us": round(self.percentile(50), 1),
+            "p95_us": round(self.percentile(95), 1),
+            "p99_us": round(self.percentile(99), 1),
+            "max_us": round(self.max_us, 1),
+        }
+
+
+#: The per-request stages every completed request records, as
+#: (name, start-stamp attr, end-stamp attr) on a runtime request.
+STAGES = (
+    ("queue", "t_enqueue", "t_flush"),
+    ("device", "t_flush", "t_complete"),
+    ("total", "t_enqueue", "t_complete"),
+)
+
+
+class Telemetry:
+    """Aggregated serving-runtime telemetry: stage histograms + counters.
+
+    One instance per :class:`~repro.serving.runtime.ServingRuntime` by
+    default; pass a shared instance to aggregate several runtimes.  All
+    methods are thread-safe.
+    """
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self.stages = {name: LatencyHistogram() for name, _, _ in STAGES}
+        self.counters = {
+            "submitted": 0, "completed": 0, "failed": 0, "rejected": 0,
+            "batches": 0, "batches_size": 0, "batches_deadline": 0,
+            "batches_drain": 0, "batch_requests": 0, "rows_served": 0,
+            "queue_peak": 0,
+        }
+
+    # -- recording -------------------------------------------------------
+
+    def count(self, name: str, n: int = 1) -> None:
+        with self._mu:
+            self.counters[name] = self.counters.get(name, 0) + n
+
+    def observe_queue_depth(self, depth: int) -> None:
+        with self._mu:
+            if depth > self.counters["queue_peak"]:
+                self.counters["queue_peak"] = depth
+
+    def record_batch(self, size: int, trigger: str) -> None:
+        """One flushed batch; ``trigger`` is ``size``/``deadline``/``drain``."""
+        with self._mu:
+            self.counters["batches"] += 1
+            self.counters["batch_requests"] += size
+            key = f"batches_{trigger}"
+            self.counters[key] = self.counters.get(key, 0) + 1
+
+    def record_request(self, request, rows: int = 0) -> None:
+        """Fold one *completed* request's stamps into the histograms."""
+        with self._mu:
+            self.counters["completed"] += 1
+            self.counters["rows_served"] += int(rows)
+            for name, start, end in STAGES:
+                t0 = getattr(request, start, None)
+                t1 = getattr(request, end, None)
+                if t0 is not None and t1 is not None:
+                    self.stages[name].record((t1 - t0) * 1e6)
+
+    # -- export ----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """JSON-able view: counters + per-stage latency percentiles."""
+        with self._mu:
+            batches = self.counters["batches"]
+            out = {
+                "counters": dict(self.counters),
+                "mean_batch_size": round(
+                    self.counters["batch_requests"] / batches, 2)
+                if batches else 0.0,
+                "latency": {name: hist.snapshot()
+                            for name, hist in self.stages.items()},
+            }
+        return out
+
+    def percentile(self, stage: str, p: float) -> float:
+        with self._mu:
+            return self.stages[stage].percentile(p)
+
+    def reset(self) -> None:
+        with self._mu:
+            self.stages = {name: LatencyHistogram() for name, _, _ in STAGES}
+            for k in self.counters:
+                self.counters[k] = 0

@@ -34,6 +34,11 @@ CLI::
     python -m repro.tuning.calibration fit     # fit + print the constants
     python -m repro.tuning.calibration show    # record counts + rank corr
     python -m repro.tuning.calibration clear   # drop this host's records
+    python -m repro.tuning.calibration compact # keep the newest N records
+                                               # per host (N = $REPRO_
+                                               # CALIBRATION_MAX_RECORDS,
+                                               # default 4096; appends
+                                               # auto-compact past 2N)
     python -m repro.tuning.calibration --smoke # CI gate: fit 30 synthetic
                                                # records, assert the rank
                                                # correlation improves
@@ -54,6 +59,7 @@ from repro.tuning.cost_model import (CandidateConfig, MachineModel,
 
 _ENV_CACHE_DIR = "REPRO_PLAN_CACHE_DIR"
 _ENV_CALIBRATION = "REPRO_CALIBRATION"   # "0" disables logging and fitting
+_ENV_MAX_RECORDS = "REPRO_CALIBRATION_MAX_RECORDS"  # decay bound; <=0 = off
 
 #: Subdirectory of the plan-cache dir holding the per-host JSONL logs.
 #: Lives *beside* the ``*.npz`` plan entries, so the plan cache's disk GC
@@ -75,6 +81,30 @@ SHRINK_WINDOW = 64
 #: Record kinds carrying a steady-state latency pair (the roofline fit);
 #: "sample" records carry the one-time sampling pre-pass instead.
 LATENCY_KINDS = ("spmm", "bucket", "plan")
+
+#: Decay bound: appends keep at most this many records per host (newest
+#: win), overridable via ``$REPRO_CALIBRATION_MAX_RECORDS`` (<= 0 turns
+#: the automatic decay off).  The fitter's recency windows are far
+#: smaller, so 4096 records is months of headroom — the bound exists so
+#: the JSONL never grows without limit on a long-lived serving host.
+DEFAULT_MAX_RECORDS = 4096
+
+#: Appends between automatic decay checks (per process, per log path):
+#: counting the log's lines is O(file), so it is amortized rather than
+#: paid on every append.
+DECAY_CHECK_EVERY = 64
+
+
+def max_records_default() -> int:
+    """The per-host record bound: ``$REPRO_CALIBRATION_MAX_RECORDS`` when
+    set (non-positive disables decay), else :data:`DEFAULT_MAX_RECORDS`."""
+    raw = os.environ.get(_ENV_MAX_RECORDS)
+    if raw is None or raw == "":
+        return DEFAULT_MAX_RECORDS
+    try:
+        return int(raw)
+    except ValueError:
+        return DEFAULT_MAX_RECORDS
 
 
 # ---------------------------------------------------------------------------
@@ -141,23 +171,103 @@ class CalibrationLog:
     interleave half-written records; readers additionally skip any line
     that fails to parse (a torn write from a crashed process loses that
     record, nothing else).
+
+    Hygiene: every :data:`DECAY_CHECK_EVERY` appends (per process, per
+    file) the log's record count is checked, and a file holding more than
+    2x :func:`max_records_default` records is compacted down to the
+    newest bound — so a long-lived serving host's log stays
+    O(:data:`DEFAULT_MAX_RECORDS`) instead of growing one line per
+    measurement forever.  :meth:`compact` is the explicit form (also the
+    CLI's ``compact`` command).
     """
 
     def __init__(self, root):
         self.root = Path(root)
+        self._appends: dict[str, int] = {}   # per-path, this process
 
     def path_for(self, host: Optional[str] = None) -> Path:
         return self.root / f"{host or host_fingerprint()}.jsonl"
 
     def append(self, record: dict) -> None:
         self.root.mkdir(parents=True, exist_ok=True)
+        path = self.path_for(record.get("host"))
         line = json.dumps(record, separators=(",", ":")) + "\n"
-        fd = os.open(self.path_for(record.get("host")),
-                     os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
         try:
             os.write(fd, line.encode())
         finally:
             os.close(fd)
+        self._maybe_decay(path)
+
+    def _maybe_decay(self, path: Path) -> None:
+        """Amortized automatic decay: every :data:`DECAY_CHECK_EVERY`
+        appends, compact the file if it holds > 2x the record bound."""
+        key = str(path)
+        n = self._appends.get(key, 0) + 1
+        self._appends[key] = n
+        if n % DECAY_CHECK_EVERY:
+            return
+        max_records = max_records_default()
+        if max_records <= 0:
+            return
+        try:
+            with open(path, "rb") as f:
+                lines = sum(1 for _ in f)
+        except OSError:
+            return
+        if lines > 2 * max_records:
+            self._compact_file(path, max_records)
+
+    @staticmethod
+    def _compact_file(path: Path, max_records: int) -> dict:
+        """Rewrite one log file keeping only the newest ``max_records``
+        parseable record lines (torn/garbage lines are dropped).  The
+        rewrite is atomic (`os.replace`); a concurrent appender racing the
+        replace can lose at most its own in-flight line — the same
+        torn-tail risk readers already tolerate."""
+        try:
+            raw = path.read_text()
+        except OSError:
+            return {"kept": 0, "dropped": 0}
+        valid = []
+        for line in raw.splitlines():
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict):
+                valid.append(line)
+        kept = valid[-max_records:] if max_records > 0 else []
+        total_lines = len(raw.splitlines())
+        tmp = path.with_suffix(".jsonl.tmp")
+        tmp.write_text("".join(l + "\n" for l in kept))
+        os.replace(tmp, path)
+        return {"kept": len(kept), "dropped": total_lines - len(kept)}
+
+    def compact(self, max_records: Optional[int] = None,
+                host: Optional[str] = None) -> dict:
+        """Shrink log files to the newest ``max_records`` records each.
+
+        ``host=None`` compacts every host's file under this root;
+        ``max_records`` defaults to :func:`max_records_default`.  Returns
+        ``{"files": n, "kept": total, "dropped": total}``.
+        """
+        if max_records is None:
+            max_records = max_records_default()
+        if max_records <= 0:
+            raise ValueError(
+                f"max_records must be > 0 to compact, got {max_records}")
+        paths = [self.path_for(host)] if host is not None else (
+            sorted(self.root.glob("*.jsonl")) if self.root.exists() else [])
+        out = {"files": 0, "kept": 0, "dropped": 0}
+        for p in paths:
+            if not p.exists():
+                continue
+            r = self._compact_file(p, max_records)
+            out["files"] += 1
+            out["kept"] += r["kept"]
+            out["dropped"] += r["dropped"]
+        return out
 
     def records(self, host: Optional[str] = None) -> list[dict]:
         """All valid records for ``host`` (default: this host), in append
@@ -575,15 +685,19 @@ def main(argv: Sequence[str] | None = None) -> None:
         prog="python -m repro.tuning.calibration",
         description="Inspect / fit / clear the per-host cost-model "
                     "calibration log.")
-    p.add_argument("command", nargs="?", choices=("fit", "show", "clear"),
+    p.add_argument("command", nargs="?",
+                   choices=("fit", "show", "clear", "compact"),
                    help="what to do with the log (omit with --smoke)")
     p.add_argument("--cache-dir", default=None,
                    help="plan-cache dir holding calibration/ "
                         f"(default: ${_ENV_CACHE_DIR})")
     p.add_argument("--host", default=None,
                    help="host fingerprint to operate on (default: this "
-                        "host; 'all' clears every host)")
+                        "host; 'all' clears/compacts every host)")
     p.add_argument("--min-records", type=int, default=MIN_FIT_RECORDS)
+    p.add_argument("--max-records", type=int, default=None,
+                   help="records kept per host by 'compact' (default: "
+                        f"${_ENV_MAX_RECORDS} or {DEFAULT_MAX_RECORDS})")
     p.add_argument("--smoke", action="store_true",
                    help="fit 30 synthetic records and assert the rank "
                         "correlation improves (CI gate; needs no log)")
@@ -602,6 +716,12 @@ def main(argv: Sequence[str] | None = None) -> None:
         n = log.clear(None if args.host == "all"
                       else args.host or host_fingerprint())
         print(json.dumps({"cleared_files": n}))
+        return
+    if args.command == "compact":
+        r = log.compact(max_records=args.max_records,
+                        host=None if args.host == "all"
+                        else args.host or host_fingerprint())
+        print(json.dumps(r))
         return
 
     host = args.host or host_fingerprint()

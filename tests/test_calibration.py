@@ -539,6 +539,79 @@ def test_env_cache_dir_activates_default_log(rng, tmp_path, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# log hygiene: compact + automatic decay (ISSUE 6 satellite)
+# ---------------------------------------------------------------------------
+
+def test_compact_keeps_newest_records(tmp_path):
+    log = CalibrationLog(tmp_path)
+    for i in range(40):
+        log.append(_record(measured=float(i)))
+    stats = log.compact(max_records=10)
+    assert stats == {"files": 1, "kept": 10, "dropped": 30}
+    recs = log.records("h")
+    assert [r["measured_us"] for r in recs] == [float(i) for i in range(30, 40)]
+    # idempotent once under the bound
+    assert log.compact(max_records=10) == {"files": 1, "kept": 10,
+                                           "dropped": 0}
+    with pytest.raises(ValueError):
+        log.compact(max_records=0)
+
+
+def test_compact_drops_unparseable_lines_and_scopes_by_host(tmp_path):
+    log = CalibrationLog(tmp_path)
+    for host in ("a", "b"):
+        for i in range(6):
+            log.append(_record(measured=float(i), host=host))
+    with open(log.path_for("a"), "a") as f:
+        f.write("garbage\n")
+        f.write('{"v": 1, "kind": "spmm", "tor')       # torn tail
+    stats = log.compact(max_records=4, host="a")
+    assert stats["files"] == 1
+    assert stats["kept"] == 4                          # junk not kept
+    assert len(log.records("a")) == 4
+    assert len(log.records("b")) == 6                  # other host untouched
+    # compacting a missing host / empty dir is a no-op, not an error
+    assert log.compact(max_records=4, host="nope")["files"] == 0
+
+
+def test_append_auto_decays_past_twice_the_bound(tmp_path, monkeypatch):
+    monkeypatch.setenv(calibration._ENV_MAX_RECORDS, "20")
+    assert calibration.max_records_default() == 20
+    log = CalibrationLog(tmp_path)
+    for i in range(150):
+        log.append(_record(measured=float(i)))
+    n = len(log.records("h"))
+    # decay kicked in: the file never grows unboundedly.  The check is
+    # amortized (every DECAY_CHECK_EVERY appends) and triggers past
+    # 2 x max, so the steady-state ceiling is 2*max + check interval.
+    assert n <= 2 * 20 + calibration.DECAY_CHECK_EVERY
+    assert n >= 20
+    # the survivors are the newest ones
+    assert log.records("h")[-1]["measured_us"] == 149.0
+    # env disable: non-positive turns decay off
+    monkeypatch.setenv(calibration._ENV_MAX_RECORDS, "0")
+    assert calibration.max_records_default() <= 0
+    log2 = CalibrationLog(tmp_path / "nodk")
+    for i in range(150):
+        log2.append(_record(measured=float(i)))
+    assert len(log2.records("h")) == 150               # never decayed
+    monkeypatch.setenv(calibration._ENV_MAX_RECORDS, "not-a-number")
+    assert calibration.max_records_default() == calibration.DEFAULT_MAX_RECORDS
+
+
+def test_cli_compact(tmp_path, capsys):
+    host = calibration.host_fingerprint()
+    log = CalibrationLog(calibration.calibration_dir(tmp_path))
+    for i in range(30):
+        log.append(_record(measured=float(i), host=host))
+    calibration.main(["compact", "--cache-dir", str(tmp_path),
+                      "--max-records", "8", "--json"])
+    report = json.loads(capsys.readouterr().out.splitlines()[0])
+    assert report["kept"] == 8 and report["dropped"] == 22
+    assert len(log.records(host)) == 8
+
+
+# ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
 

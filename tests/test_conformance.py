@@ -3,7 +3,8 @@
 One parametrized grid runs **every execution path** — global ELL on the
 jax and Pallas backends, the fused AES kernel, BlockELL with width-bucketed
 launches, the fused-dequant quantized paths, the sharded serving engine
-(loop and spmd), and the tuned ``strategy="auto"`` entry points — against
+(loop and spmd), the async continuous-batching ``ServingRuntime``, and
+the tuned ``strategy="auto"`` entry points — against
 the ``kernels/ref.py`` oracles (and, where coverage is exact, the dense
 ground truth) on a shared set of adversarial graphs: an empty graph, a
 graph with empty rows, a single dense row amid a sparse tail, and a ragged
@@ -33,7 +34,7 @@ from repro.core.graph import (csr_from_edges, csr_to_dense,
 from repro.core.quantization import dequantize, quantize
 from repro.core.sampling import sample_csr_to_block_ell
 from repro.kernels import ops, ref
-from repro.serving import GNNServer
+from repro.serving import GNNServer, ServingRuntime
 from repro.tuning import PlanCache
 
 from conftest import random_csr
@@ -324,6 +325,30 @@ def _path_serve_spmd(name):
     _close(server.aggregate(), want)
 
 
+def _path_serve_runtime(name):
+    """The async continuous-batching runtime on the adversarial grid:
+    resident-operand and dense-operand requests through
+    ``ServingRuntime.submit()`` must match the synchronous ``flush()``
+    engine bit-for-bit and the dense oracle within float tolerance."""
+    g, x, want = _case(name)
+    server = GNNServer(g, x, num_shards=2, cache=PlanCache(),
+                       tune_kwargs=_exact_tune_kwargs(g))
+    t0, t1 = server.submit(), server.submit(np.asarray(x) * 2.0)
+    sync = [np.asarray(r) for r in server.flush()]
+    rt = ServingRuntime(server, max_batch=4, max_delay_ms=2.0)
+    try:
+        r0 = rt.submit()
+        r1 = rt.submit(np.asarray(x) * 2.0)
+        got0 = np.asarray(r0.result(60))
+        got1 = np.asarray(r1.result(60))
+    finally:
+        rt.close()
+    np.testing.assert_array_equal(got0, sync[t0])
+    np.testing.assert_array_equal(got1, sync[t1])
+    _close(got0, want)
+    _close(got1, 2.0 * want, label="scaled-operand")
+
+
 def _path_serve_matches_block_plan(name):
     """Sharded output == the single-device blocked plan, same knobs."""
     g, x, _ = _case(name)
@@ -349,6 +374,7 @@ _PATHS = {
     "auto-block-quant": _path_auto_block_quant,
     "serve-loop": _path_serve_loop,
     "serve-loop-quant": _path_serve_loop_quant,
+    "serve-runtime": _path_serve_runtime,
     "serve-spmd": _path_serve_spmd,
     "serve-vs-block": _path_serve_matches_block_plan,
 }

@@ -1,0 +1,447 @@
+"""Serving runtime tests (repro.serving.runtime / telemetry / traffic).
+
+Covers the continuous-batching triggers (size vs deadline), backpressure
+policies (block vs reject), graceful ``close()`` drain, enqueue-time
+validation on both the engine and the runtime, telemetry histograms, the
+Poisson traffic generator, and runtime-vs-``flush()`` parity — including
+a forced-host-device subprocess run pinning the runtime to the engine and
+the ``ref.py`` oracle on a real 4-device mesh.  The per-graph conformance
+sweep of the runtime path lives in ``tests/test_conformance.py``
+(``serve-runtime``).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.serving import (BackpressureError, GNNServer, LatencyHistogram,
+                           ServingRuntime, Telemetry, poisson_arrivals,
+                           run_open_loop, sync_baseline)
+from repro.tuning import PlanCache
+
+from conftest import random_csr
+
+
+def _exact_tk(csr, **over):
+    w = max(int(np.asarray(csr.row_nnz()).max()), 1)
+    tk = dict(widths=(w,), include_full=True, measure_plan=False,
+              warmup=0, iters=1)
+    tk.update(over)
+    return tk
+
+
+def _dense_ref(csr, x):
+    return np.asarray(ref.csr_spmm(csr.row_ptr, csr.col_ind, csr.val, x))
+
+
+def _server(rng, rows=36, shards=2, **kw):
+    g = random_csr(rng, rows, 4.0)
+    x = jnp.asarray(rng.normal(size=(rows, 6)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=shards, cache=PlanCache(),
+                       tune_kwargs=_exact_tk(g), **kw)
+    return g, x, server
+
+
+# ---------------------------------------------------------------------------
+# batching triggers
+# ---------------------------------------------------------------------------
+
+def test_deadline_flush_with_no_further_submissions(rng):
+    """Fewer requests than max_batch and nothing else arriving: only the
+    deadline can flush them — and it must."""
+    g, x, server = _server(rng)
+    want = _dense_ref(g, x)
+    with ServingRuntime(server, max_batch=64, max_delay_ms=20.0) as rt:
+        reqs = [rt.submit(), rt.submit(np.asarray(x) * 3.0)]
+        np.testing.assert_allclose(np.asarray(reqs[0].result(30)), want,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(reqs[1].result(30)), want * 3,
+                                   rtol=1e-4, atol=1e-4)
+        snap = rt.snapshot()
+    assert snap["counters"]["batches"] == 1
+    assert snap["counters"]["batches_deadline"] == 1
+    assert snap["counters"]["batches_size"] == 0
+    # both rode one batch and the queue stage reflects the deadline wait
+    assert reqs[0].batch_size == 2
+    assert reqs[0].latency_us()["total"] > 0
+
+
+def test_size_flush_under_burst(rng):
+    """A burst >= max_batch flushes on size, well before a long deadline."""
+    g, x, server = _server(rng)
+    want = _dense_ref(g, x)
+    t0 = time.perf_counter()
+    with ServingRuntime(server, max_batch=4, max_delay_ms=30_000.0) as rt:
+        reqs = [rt.submit() for _ in range(8)]
+        for r in reqs:
+            np.testing.assert_allclose(np.asarray(r.result(60)), want,
+                                       rtol=1e-5, atol=1e-5)
+        snap = rt.snapshot()
+    assert time.perf_counter() - t0 < 20.0   # nowhere near the deadline
+    assert snap["counters"]["batches_size"] >= 2
+    assert snap["counters"]["completed"] == 8
+    assert all(r.batch_size == 4 for r in reqs)
+
+
+def test_results_match_synchronous_flush_bitwise(rng):
+    """The runtime is a scheduler, not a numeric path: identical requests
+    through the runtime and through ``flush()`` yield identical arrays."""
+    g, x, server = _server(rng)
+    h = jnp.asarray(rng.normal(size=(g.num_rows, 5)).astype(np.float32))
+    t0, t1 = server.submit(), server.submit(h)
+    sync = [np.asarray(r) for r in server.flush()]
+    with ServingRuntime(server, max_batch=2, max_delay_ms=50.0) as rt:
+        r0, r1 = rt.submit(), rt.submit(h)
+        np.testing.assert_array_equal(np.asarray(r0.result(30)), sync[t0])
+        np.testing.assert_array_equal(np.asarray(r1.result(30)), sync[t1])
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reject_policy(rng):
+    g, x, server = _server(rng)
+    rt = ServingRuntime(server, max_batch=64, max_delay_ms=60_000.0,
+                        queue_depth=2, policy="reject")
+    try:
+        rt.submit()
+        rt.submit()
+        with pytest.raises(BackpressureError):
+            rt.submit()
+        assert rt.telemetry.counters["rejected"] == 1
+    finally:
+        rt.close()
+    # close() drained the two admitted requests despite the huge deadline
+    assert rt.telemetry.counters["completed"] == 2
+
+
+def test_backpressure_block_policy_unblocks_on_flush(rng):
+    g, x, server = _server(rng)
+    rt = ServingRuntime(server, max_batch=4, max_delay_ms=150.0,
+                        queue_depth=1, policy="block")
+    try:
+        first = rt.submit()
+        got_in = []
+
+        def blocked_submit():
+            got_in.append(rt.submit())
+
+        th = threading.Thread(target=blocked_submit)
+        th.start()
+        th.join(timeout=30.0)      # deadline flush frees the queue slot
+        assert not th.is_alive()
+        assert len(got_in) == 1
+        first.result(30)
+        got_in[0].result(30)
+    finally:
+        rt.close()
+
+
+def test_backpressure_block_timeout(rng):
+    g, x, server = _server(rng)
+    rt = ServingRuntime(server, max_batch=64, max_delay_ms=60_000.0,
+                        queue_depth=1, policy="block")
+    try:
+        rt.submit()
+        with pytest.raises(BackpressureError):
+            rt.submit(timeout=0.05)
+    finally:
+        rt.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: close() drain, post-close submission, drain()
+# ---------------------------------------------------------------------------
+
+def test_close_drains_all_inflight_requests(rng):
+    """Requests parked behind a far deadline are all served on close()."""
+    g, x, server = _server(rng)
+    want = _dense_ref(g, x)
+    rt = ServingRuntime(server, max_batch=64, max_delay_ms=60_000.0)
+    reqs = [rt.submit() for _ in range(5)]
+    assert not any(r.done() for r in reqs)
+    rt.close()
+    for r in reqs:
+        assert r.done()
+        np.testing.assert_allclose(np.asarray(r.result(0)), want,
+                                   rtol=1e-5, atol=1e-5)
+    assert rt.telemetry.counters["batches_drain"] >= 1
+    with pytest.raises(ValueError, match="closed"):
+        rt.submit()
+    rt.close()   # idempotent
+
+
+def test_drain_waits_without_closing(rng):
+    g, x, server = _server(rng)
+    with ServingRuntime(server, max_batch=2, max_delay_ms=5.0) as rt:
+        reqs = [rt.submit() for _ in range(6)]
+        assert rt.drain(timeout=60.0)
+        assert all(r.done() for r in reqs)
+        # still open
+        rt.submit().result(30)
+
+
+def test_pipeline_overlap_admits_while_on_device(rng):
+    """Continuous batching: requests submitted while earlier batches are
+    in flight are admitted and served in later batches, not dropped."""
+    g, x, server = _server(rng)
+    want = _dense_ref(g, x)
+    with ServingRuntime(server, max_batch=2, max_delay_ms=1.0,
+                        queue_depth=64) as rt:
+        reqs = [rt.submit() for _ in range(12)]   # 6 batches through 2 slots
+        for r in reqs:
+            np.testing.assert_allclose(np.asarray(r.result(60)), want,
+                                       rtol=1e-5, atol=1e-5)
+        snap = rt.snapshot()
+    assert snap["counters"]["batches"] >= 2
+    assert snap["counters"]["completed"] == 12
+
+
+# ---------------------------------------------------------------------------
+# enqueue-time validation (engine + runtime)
+# ---------------------------------------------------------------------------
+
+def test_engine_submit_validates_at_enqueue(rng):
+    g, x, server = _server(rng)
+    with pytest.raises(ValueError, match="num_nodes"):
+        server.submit(np.zeros((g.num_rows + 1, 3), np.float32))
+    with pytest.raises(ValueError, match="2-D"):
+        server.submit(np.zeros(g.num_rows, np.float32))
+    with pytest.raises(ValueError, match="dtype"):
+        server.submit(np.zeros((g.num_rows, 3), np.complex64))
+    with pytest.raises(ValueError, match="dtype"):
+        server.submit(np.array([["a"] * 3] * g.num_rows))
+    # int and bool operands are fine (cast to float32)
+    server.submit(np.ones((g.num_rows, 2), np.int32))
+    server.submit(np.ones((g.num_rows, 2), bool))
+    assert len(server.flush()) == 2
+
+
+def test_engine_close_rejects_then_drains(rng):
+    g, x, server = _server(rng)
+    want = _dense_ref(g, x)
+    server.submit()
+    results = server.close()
+    np.testing.assert_allclose(np.asarray(results[0]), want,
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="closed"):
+        server.submit()
+    assert server.close() == []   # idempotent
+
+
+def test_runtime_submit_validates_at_enqueue(rng):
+    """Bad operands bounce at runtime.submit() — synchronously, with a
+    clear error — and never poison a batch for the valid requests."""
+    g, x, server = _server(rng)
+    want = _dense_ref(g, x)
+    with ServingRuntime(server, max_batch=8, max_delay_ms=10.0) as rt:
+        ok = rt.submit()
+        with pytest.raises(ValueError, match="num_nodes"):
+            rt.submit(np.zeros((g.num_rows + 2, 3), np.float32))
+        with pytest.raises(ValueError, match="dtype"):
+            rt.submit(np.zeros((g.num_rows, 3), np.complex64))
+        np.testing.assert_allclose(np.asarray(ok.result(30)), want,
+                                   rtol=1e-5, atol=1e-5)
+        assert rt.telemetry.counters["failed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for us in (100.0,) * 98 + (10_000.0, 100_000.0):
+        h.record(us)
+    assert h.count == 100
+    assert h.percentile(50) == pytest.approx(100.0, rel=0.5)
+    assert h.percentile(99) == pytest.approx(10_000.0, rel=0.5)
+    assert h.max_us == 100_000.0
+    assert h.percentile(100) == 100_000.0
+    # ignores junk, clamps out-of-range
+    h.record(float("nan"))
+    h.record(-5.0)
+    assert h.count == 100
+    h.record(1e12)            # overflow bucket
+    assert h.count == 101
+    snap = h.snapshot()
+    assert set(snap) == {"count", "mean_us", "min_us", "p50_us", "p95_us",
+                         "p99_us", "max_us"}
+    assert LatencyHistogram().percentile(99) == 0.0
+
+
+def test_telemetry_records_stages_and_batches(rng):
+    g, x, server = _server(rng)
+    tel = Telemetry()
+    with ServingRuntime(server, max_batch=2, max_delay_ms=5.0,
+                        telemetry=tel) as rt:
+        for r in [rt.submit() for _ in range(4)]:
+            r.result(30)
+    snap = tel.snapshot()
+    assert snap["counters"]["submitted"] == 4
+    assert snap["counters"]["completed"] == 4
+    assert snap["counters"]["rows_served"] == 4 * g.num_rows
+    assert snap["mean_batch_size"] == pytest.approx(2.0)
+    for stage in ("queue", "device", "total"):
+        assert snap["latency"][stage]["count"] == 4
+        assert snap["latency"][stage]["p99_us"] >= 0.0
+    # total >= device for every request by construction
+    assert snap["latency"]["total"]["mean_us"] >= \
+        snap["latency"]["device"]["mean_us"]
+    tel.reset()
+    assert tel.snapshot()["counters"]["submitted"] == 0
+
+
+# ---------------------------------------------------------------------------
+# traffic
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_statistics():
+    at = poisson_arrivals(100.0, 4000, seed=3)
+    assert at.shape == (4000,)
+    assert np.all(np.diff(at) >= 0)              # cumulative
+    gaps = np.diff(np.concatenate([[0.0], at]))
+    assert np.mean(gaps) == pytest.approx(1 / 100.0, rel=0.1)
+    # memorylessness-ish: exponential CV ~ 1
+    assert np.std(gaps) / np.mean(gaps) == pytest.approx(1.0, rel=0.15)
+    np.testing.assert_array_equal(at, poisson_arrivals(100.0, 4000, seed=3))
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 10)
+    with pytest.raises(ValueError):
+        poisson_arrivals(10.0, 0)
+
+
+def test_open_loop_reports_throughput_and_tails(rng):
+    g, x, server = _server(rng)
+    with ServingRuntime(server, max_batch=8, max_delay_ms=3.0,
+                        policy="block") as rt:
+        res = run_open_loop(rt, rate_rps=400.0, num_requests=24, seed=0)
+    assert res["submitted"] == 24
+    assert res["completed"] == 24 and res["failed"] == 0
+    assert res["achieved_rps"] > 0
+    assert res["rows_per_s"] == pytest.approx(
+        res["achieved_rps"] * g.num_rows, rel=0.01)
+    assert 0 < res["p50_ms"] <= res["p99_ms"] <= res["max_ms"]
+    assert res["batches"] >= 1
+
+
+def test_open_loop_sheds_under_overload(rng):
+    """A saturated reject-policy runtime sheds instead of throttling: the
+    generator stays open-loop and the drop count is reported."""
+    g, x, server = _server(rng)
+    rt = ServingRuntime(server, max_batch=4, max_delay_ms=60_000.0,
+                        queue_depth=2, policy="reject")
+    try:
+        res = run_open_loop(rt, rate_rps=5000.0, num_requests=30, seed=1,
+                            result_timeout=0.01)
+        assert res["rejected"] > 0
+        assert res["submitted"] + res["rejected"] == 30
+    finally:
+        rt.close()
+
+
+def test_sync_baseline_shape(rng):
+    g, x, server = _server(rng)
+    base = sync_baseline(server, iters=3, warmup=1)
+    assert base["iters"] == 3
+    assert base["mean_us"] > 0
+    assert base["rps"] == pytest.approx(1e6 / base["mean_us"], rel=1e-2)
+    assert base["p50_ms"] <= base["p99_ms"]
+
+
+# ---------------------------------------------------------------------------
+# constructor validation
+# ---------------------------------------------------------------------------
+
+def test_runtime_rejects_bad_knobs(rng):
+    g, x, server = _server(rng)
+    with pytest.raises(ValueError, match="policy"):
+        ServingRuntime(server, policy="drop-oldest")
+    with pytest.raises(ValueError, match="max_batch"):
+        ServingRuntime(server, max_batch=0)
+    with pytest.raises(ValueError, match="queue_depth"):
+        ServingRuntime(server, queue_depth=0)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ServingRuntime(server, pipeline_depth=0)
+
+
+# ---------------------------------------------------------------------------
+# forced-host-device parity (subprocess: XLA device count is init-time)
+# ---------------------------------------------------------------------------
+
+_DEVICE_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.kernels import ref
+from repro.serving import GNNServer, ServingRuntime
+from repro.tuning import PlanCache
+from repro.core.graph import csr_from_edges
+
+assert jax.device_count() == 4, jax.device_count()
+rng = np.random.default_rng(9)
+rows = 70
+g = csr_from_edges(rng.integers(0, rows, 5 * rows),
+                   rng.integers(0, rows, 5 * rows), rows)
+x = jnp.asarray(rng.normal(size=(rows, 11)).astype(np.float32))
+want = np.asarray(ref.csr_spmm(g.row_ptr, g.col_ind, g.val, x))
+w = int(np.asarray(g.row_nnz()).max())
+tk = dict(widths=(w,), include_full=True, measure_plan=False,
+          warmup=0, iters=1)
+for mode in ("loop", "spmd"):
+    server = GNNServer(g, x, num_shards=4, mode=mode,
+                       cache=PlanCache(), tune_kwargs=tk)
+    t0, t1 = server.submit(), server.submit(np.asarray(x) * 2.0)
+    sync = [np.asarray(r) for r in server.flush()]
+    np.testing.assert_allclose(sync[t0], want, rtol=1e-5, atol=1e-5)
+    with ServingRuntime(server, max_batch=4, max_delay_ms=5.0) as rt:
+        r0, r1 = rt.submit(), rt.submit(np.asarray(x) * 2.0)
+        burst = [rt.submit() for _ in range(6)]
+        # runtime == synchronous flush (bit-identical float path) == oracle
+        np.testing.assert_array_equal(np.asarray(r0.result(120)), sync[t0])
+        np.testing.assert_array_equal(np.asarray(r1.result(120)), sync[t1])
+        for r in burst:
+            np.testing.assert_array_equal(np.asarray(r.result(120)),
+                                          sync[t0])
+        assert rt.telemetry.counters["completed"] == 8
+print("RUNTIME-DEVICES-OK")
+"""
+
+
+@pytest.mark.slow
+def test_runtime_parity_on_forced_host_devices():
+    """Runtime results pinned to GNNServer.flush() and the ref oracle on a
+    real 4-device host mesh, loop and spmd engines (fresh process; XLA
+    device count is init-time only)."""
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    r = subprocess.run([sys.executable, "-c", _DEVICE_SCRIPT],
+                       env=env, capture_output=True, text=True, timeout=300)
+    assert "RUNTIME-DEVICES-OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_runtime_smoke_cli_subprocess():
+    """The CI gate end to end: `python -m repro.serving.runtime --smoke`
+    on 4 forced host devices."""
+    import json
+
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.serving.runtime", "--smoke", "--json"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert "smoke: OK" in r.stdout, r.stdout + r.stderr
+    report = json.loads(r.stdout.splitlines()[0])
+    assert report["parity_loop"] == "ok" and report["parity_spmd"] == "ok"
+    assert report["open_loop"]["achieved_rps"] > 0
