@@ -8,9 +8,10 @@ import sys
 
 def main() -> None:
     from benchmarks import (accuracy_vs_w, autotune_gain, block_tuning_gain,
-                            calibration_gain, kernel_blocks, kernel_speedup,
-                            motivation, quant_block_gain, quant_loading,
-                            sampling_cdf, serving_throughput)
+                            calibration_gain, incremental_update,
+                            kernel_blocks, kernel_speedup, motivation,
+                            quant_block_gain, quant_loading, sampling_cdf,
+                            serving_throughput)
 
     print("name,us_per_call,derived")
     sampling_cdf.run()
@@ -26,6 +27,9 @@ def main() -> None:
     # includes the open-loop continuous-batching sweep (ServingRuntime
     # vs synchronous flush under Poisson arrivals -> BENCH_serving.json)
     serving_throughput.run()
+    # plan patching vs cold re-tune for a 1% edge delta
+    # (-> BENCH_incremental.json, gate: parity + >10x)
+    incremental_update.run()
     try:
         from benchmarks import roofline
         roofline.report()

@@ -11,11 +11,20 @@ wide one only on its dense head (ROADMAP "per-row-block configs").
 """
 from __future__ import annotations
 
+import hashlib
+import weakref
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+#: Row granularity of the content-digest blocks the plan-cache fingerprint
+#: is assembled from (``csr_block_digests``).  Fixed — independent of any
+#: plan's ``block_rows`` knob — so the fingerprint of a CSR is a pure
+#: function of its content, and an edge delta only dirties the digests of
+#: the row blocks it touches (``repro.tuning.incremental``).
+DIGEST_BLOCK_ROWS = 4096
 
 
 class CSR(NamedTuple):
@@ -315,3 +324,261 @@ def pad_csr_to_ell(csr: CSR, width: int | None = None) -> ELL:
 
     val, col = sample_csr_to_ell_sfs(csr.row_ptr, csr.col_ind, csr.val, w)
     return ELL(val, col, csr.num_cols)
+
+
+def num_digest_blocks(num_rows: int,
+                      digest_rows: int = DIGEST_BLOCK_ROWS) -> int:
+    """Digest-block count for a row count (>= 1 even for an empty graph, so
+    every CSR — including 0-row ones — has at least one content digest)."""
+    return max(-(-int(num_rows) // int(digest_rows)), 1)
+
+
+# Identity-keyed digest memo.  CSR arrays are treated as immutable
+# throughout the library, so a digest computed once for a given
+# (row_ptr, col_ind, val) triple stays valid for the objects' lifetime.
+# Entries evict when the backing col_ind array is garbage collected
+# (weakref.finalize); the size cap is a backstop for array types without
+# weakref support.  Only digests *computed from the data* are ever stored
+# — nothing seeds this cache — so differential digest checks stay
+# meaningful.
+_DIGEST_MEMO: dict = {}
+_DIGEST_MEMO_CAP = 512
+
+
+def _digest_memo(csr: CSR) -> dict:
+    key = (id(csr.row_ptr), id(csr.col_ind), id(csr.val))
+    entry = _DIGEST_MEMO.get(key)
+    if entry is None:
+        if len(_DIGEST_MEMO) >= _DIGEST_MEMO_CAP:
+            _DIGEST_MEMO.clear()
+        entry = _DIGEST_MEMO[key] = {}
+        try:
+            weakref.finalize(csr.col_ind, _DIGEST_MEMO.pop, key, None)
+        except TypeError:  # pragma: no cover - non-weakrefable array type
+            pass
+    return entry
+
+
+def csr_block_digests(csr: CSR, digest_rows: int = DIGEST_BLOCK_ROWS,
+                      blocks=None) -> list:
+    """Content digests of fixed-granularity row blocks of a CSR.
+
+    Digest block ``b`` covers rows ``[b * digest_rows, (b+1) * digest_rows)``
+    and hashes the block's *locally normalized* row pointers
+    (``row_ptr[r0:r1+1] - row_ptr[r0]``) plus its ``col_ind``/``val`` slices.
+    Normalizing makes each digest independent of how many edges precede the
+    block, so an edge delta in block 3 leaves blocks 0–2 and 4+ digests
+    valid even though their absolute ``row_ptr`` offsets shifted — the
+    property ``repro.tuning.incremental`` relies on to maintain the plan
+    fingerprint without re-hashing the full CSR.
+
+    Args:
+      csr: source matrix.
+      digest_rows: block granularity.  Leave at the default — the plan-cache
+        fingerprint is defined over :data:`DIGEST_BLOCK_ROWS` blocks.
+      blocks: optional iterable of block ids to digest (default: all
+        ``num_digest_blocks`` blocks).  Used by the delta path to re-digest
+        only touched blocks.
+
+    Returns a list of 32-hex-char digests aligned with ``blocks``.
+
+    Digests are memoized per array-identity of the CSR's backing buffers
+    (the library never mutates them in place), so re-digesting blocks of a
+    CSR object that was already tuned or patched is free — this is what
+    keeps ``apply_edge_updates``'s wrong-graph guard off the patch path's
+    critical cost in steady-state serving.
+    """
+    n = csr.num_rows
+    if blocks is None:
+        blocks = range(num_digest_blocks(n, digest_rows))
+    blocks = [int(b) for b in blocks]
+    memo = _digest_memo(csr)
+    todo = [b for b in blocks if (digest_rows, b) not in memo]
+    if todo:
+        rp = np.asarray(csr.row_ptr, np.int64)
+        ci = np.ascontiguousarray(np.asarray(csr.col_ind))
+        v = np.ascontiguousarray(np.asarray(csr.val))
+        for b in todo:
+            r0 = min(b * digest_rows, n)
+            r1 = min(r0 + digest_rows, n)
+            lo, hi = int(rp[r0]), int(rp[r1])
+            h = hashlib.blake2b(digest_size=16)
+            h.update(np.ascontiguousarray(rp[r0:r1 + 1] - rp[r0]).tobytes())
+            h.update(ci[lo:hi].tobytes())
+            h.update(v[lo:hi].tobytes())
+            memo[(digest_rows, b)] = h.hexdigest()
+    return [memo[(digest_rows, b)] for b in blocks]
+
+
+def combine_block_digests(digests, num_rows: int, num_cols: int,
+                          digest_rows: int = DIGEST_BLOCK_ROWS) -> str:
+    """Fold per-block digests into one CSR content fingerprint.
+
+    ``combine(csr_block_digests(csr), csr.num_rows, csr.num_cols)`` equals
+    :func:`repro.tuning.features.fingerprint` — the plan-cache key — by
+    definition, so a plan patched block-by-block lands on exactly the key a
+    cold tune of the same graph would compute.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.asarray([num_rows, num_cols, digest_rows], np.int64).tobytes())
+    for d in digests:
+        h.update(bytes.fromhex(d))
+    return h.hexdigest()
+
+
+def _parse_deltas(entries, what: str):
+    """Normalize a delta list to (rows, cols, vals) int64/int64/f32 arrays.
+
+    Accepts a sequence of ``(row, col)`` or ``(row, col, val)`` tuples (or
+    an equivalent 2-D array).  Missing vals default to 1.0.
+    """
+    entries = np.asarray(list(entries), np.float64)
+    if entries.size == 0:
+        z = np.zeros(0, np.int64)
+        return z, z, np.zeros(0, np.float32)
+    if entries.ndim != 2 or entries.shape[1] not in (2, 3):
+        raise ValueError(f"{what} must be (row, col[, val]) tuples, "
+                         f"got shape {entries.shape}")
+    rows = entries[:, 0].astype(np.int64)
+    cols = entries[:, 1].astype(np.int64)
+    if not (np.all(rows == entries[:, 0]) and np.all(cols == entries[:, 1])):
+        raise ValueError(f"{what} rows/cols must be integers")
+    vals = (entries[:, 2].astype(np.float32) if entries.shape[1] == 3
+            else np.ones(len(rows), np.float32))
+    return rows, cols, vals
+
+
+def apply_csr_deltas(csr: CSR, additions=(), deletions=()):
+    """Apply edge insertions and deletions to a CSR, tracking touched rows.
+
+    The workhorse of the incremental plan-maintenance path: deletions are
+    applied first, then additions.  The node set is fixed — deltas must
+    reference existing row/col ids (graph growth is a re-partition, not a
+    patch).  Strictness is deliberate: every delta must change the graph,
+    so a patched plan's provenance is exact.
+
+    Args:
+      csr: source matrix.
+      additions: ``(row, col)`` or ``(row, col, val)`` tuples; ``val``
+        defaults to 1.0.  Adding a pair still present after deletions, a
+        pair listed twice, or an out-of-range id raises ``ValueError``.
+      deletions: ``(row, col)`` tuples.  A deletion removes *every* stored
+        instance of the pair; deleting an absent or repeated pair raises
+        ``ValueError``.
+
+    Returns ``(new_csr, touched_rows)`` where ``touched_rows`` is a sorted
+    unique int64 array.  Untouched rows keep byte-identical
+    ``col_ind``/``val`` slices (their :func:`csr_block_digests` stay valid);
+    touched rows are re-sorted by column.
+    """
+    add_r, add_c, add_v = _parse_deltas(additions, "additions")
+    del_r, del_c, _ = _parse_deltas(deletions, "deletions")
+    if add_r.size == 0 and del_r.size == 0:
+        return csr, np.zeros(0, np.int64)
+
+    n, m = csr.num_rows, csr.num_cols
+    for what, r, c in (("additions", add_r, add_c),
+                       ("deletions", del_r, del_c)):
+        if r.size and (r.min() < 0 or r.max() >= n):
+            raise ValueError(f"{what} row out of range [0, {n})")
+        if c.size and (c.min() < 0 or c.max() >= m):
+            raise ValueError(f"{what} col out of range [0, {m})")
+
+    rp = np.asarray(csr.row_ptr, np.int64)
+    ci = np.asarray(csr.col_ind, np.int64)
+    v = np.asarray(csr.val, np.float32)
+    edge_rows = np.repeat(np.arange(n, dtype=np.int64), rp[1:] - rp[:-1])
+
+    touched = np.unique(np.concatenate([del_r, add_r]))
+    touched_mask = np.zeros(n, bool)
+    touched_mask[touched] = True
+    edge_touched = touched_mask[edge_rows]
+
+    # Every membership check below involves touched rows only, so the key
+    # arithmetic stays O(touched edges) — a full-graph ``np.isin`` here
+    # would dominate small-delta patches.
+    tidx = np.flatnonzero(edge_touched)
+    tkeys = edge_rows[tidx] * m + ci[tidx]
+    # Rows are column-sorted in every CSR this module builds, making
+    # tkeys already ascending — hub-heavy deltas touch most of the edge
+    # mass, so skipping the re-sort (and the lexsort below) matters.
+    presorted = tkeys.size == 0 or not np.any(tkeys[1:] < tkeys[:-1])
+    stkeys = tkeys if presorted else np.sort(tkeys)
+
+    def _member(sorted_keys, query):
+        pos = np.searchsorted(sorted_keys, query)
+        hit = pos < sorted_keys.size
+        hit[hit] &= sorted_keys[pos[hit]] == query[hit]
+        return hit
+
+    del_keys = del_r * m + del_c
+    if np.unique(del_keys).size != del_keys.size:
+        raise ValueError("duplicate (row, col) pair in deletions")
+    missing = ~_member(stkeys, del_keys)
+    if missing.any():
+        i = int(np.flatnonzero(missing)[0])
+        raise ValueError(f"deletion ({del_r[i]}, {del_c[i]}) not present")
+    keep = np.ones(len(edge_rows), bool)
+    keep[tidx] = ~_member(np.sort(del_keys), tkeys)
+
+    add_keys = add_r * m + add_c
+    if np.unique(add_keys).size != add_keys.size:
+        raise ValueError("duplicate (row, col) pair in additions")
+    surv_keys = tkeys[keep[tidx]]          # order-preserving mask
+    if not presorted:
+        surv_keys = np.sort(surv_keys)
+    clash = _member(surv_keys, add_keys)
+    if clash.any():
+        i = int(np.flatnonzero(clash)[0])
+        raise ValueError(f"addition ({add_r[i]}, {add_c[i]}) already present")
+
+    # surviving edges of touched rows + additions, re-sorted by (row, col)
+    sel = edge_touched & keep
+    sb_r, sb_c, sb_v = edge_rows[sel], ci[sel], v[sel]
+    aorder = np.lexsort((add_c, add_r))
+    sa_r, sa_c, sa_v = add_r[aorder], add_c[aorder], add_v[aorder]
+    if presorted:
+        # two-way merge of the (already sorted) survivors with the sorted
+        # additions — no equal keys across the two (clash check above)
+        ak = sa_r * m + sa_c
+        nb, na = surv_keys.size, ak.size
+        pr = np.empty(nb + na, np.int64)
+        pc = np.empty(nb + na, np.int64)
+        pv = np.empty(nb + na, np.float32)
+        bpos = np.arange(nb) + np.searchsorted(ak, surv_keys)
+        apos = np.searchsorted(surv_keys, ak) + np.arange(na)
+        pr[bpos], pc[bpos], pv[bpos] = sb_r, sb_c, sb_v
+        pr[apos], pc[apos], pv[apos] = sa_r, sa_c, sa_v
+    else:
+        pr = np.concatenate([sb_r, sa_r])
+        pc = np.concatenate([sb_c, sa_c])
+        pv = np.concatenate([sb_v, sa_v])
+        order = np.lexsort((pc, pr))
+        pr, pc, pv = pr[order], pc[order], pv[order]
+
+    old_cnt = rp[1:] - rp[:-1]
+    new_cnt = (old_cnt - np.bincount(edge_rows[~keep], minlength=n)
+               + np.bincount(add_r, minlength=n))
+    new_rp = np.zeros(n + 1, np.int64)
+    np.cumsum(new_cnt, out=new_rp[1:])
+    nnz_new = int(new_rp[-1])
+    new_ci = np.empty(nnz_new, np.int64)
+    new_v = np.empty(nnz_new, np.float32)
+
+    # untouched edges land at their original within-row offsets
+    un = np.flatnonzero(~edge_touched)
+    dest = new_rp[edge_rows[un]] + (un - rp[edge_rows[un]])
+    new_ci[dest] = ci[un]
+    new_v[dest] = v[un]
+
+    # touched rows: contiguous sorted groups at their new row starts
+    pstart = np.zeros(n + 1, np.int64)
+    np.cumsum(np.bincount(pr, minlength=n), out=pstart[1:])
+    dest = new_rp[pr] + (np.arange(len(pr), dtype=np.int64) - pstart[pr])
+    new_ci[dest] = pc
+    new_v[dest] = pv
+
+    out = CSR(jnp.asarray(new_rp.astype(np.int32)),
+              jnp.asarray(new_ci.astype(np.int32)),
+              jnp.asarray(new_v), num_cols=m)
+    return out, touched

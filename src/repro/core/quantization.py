@@ -78,6 +78,26 @@ def as_quantized(features, bits: int) -> QuantizedFeatures:
     return quantize(features, bits)
 
 
+def requantize_rows(qf: QuantizedFeatures, rows, values) -> QuantizedFeatures:
+    """Re-encode only ``rows`` of a quantized matrix (Eq. 1) with its stored
+    global ``(x_min, x_max)`` range.
+
+    The incremental plan-maintenance path uses this when a feature update
+    touches a few rows: the rest of the uint operand is reused byte-for-byte
+    and only the changed rows pay the quantization pass.  The global range
+    is *not* widened — updated values outside ``[x_min, x_max]`` clip to the
+    boundary levels (re-deriving the range would re-encode every row, i.e.
+    a full re-quantization; callers that drift past the range should
+    re-tune instead).
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    values = jnp.asarray(values, jnp.float32)
+    if rows.size == 0:
+        return qf
+    q = qf.q.at[rows].set(_quantize(values, qf.x_min, qf.x_max, qf.bits))
+    return qf._replace(q=q)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "dtype"))
 def dequantize_arrays(q, x_min, x_max, bits: int, dtype=jnp.float32):
     """Eq. 2 on raw arrays (used by the Pallas dequant kernel's oracle)."""

@@ -195,6 +195,54 @@ STRATEGIES = {
 # Blocked sampling: one (strategy, width) per fixed-size row block.
 # ----------------------------------------------------------------------------
 
+def sample_block_segment(csr, row_nnz_host, b: int, strat: str, width: int,
+                         block_rows: int):
+    """Sample one row block of a CSR into a padded ELL segment.
+
+    The per-block body of :func:`sample_csr_to_block_ell`, factored out so
+    the incremental patcher (``repro.tuning.incremental``) produces segments
+    bit-identical to a cold stitch of the same ``(strategy, width)`` — each
+    sampler sees the global ``col_ind``/``val`` arrays through the sliced
+    ``row_ptr``, so only the block's own row content matters.
+
+    Args:
+      csr: the source matrix.
+      row_nnz_host: host int array of per-row nnz (hoisted by the caller).
+      b: block index.
+      strat: key of :data:`STRATEGIES` or ``"full"`` (pads to the block's
+        own max row nnz; the width argument is ignored).
+      width: requested ELL width (floored to 1).
+      block_rows: rows per block; a short last block is zero-padded.
+
+    Returns ``(val, col, live_w, width, strategy)`` with ``val``/``col`` of
+    shape ``[block_rows, width]`` and ``live_w`` int32[block_rows].
+    """
+    from repro.core.graph import ell_live_widths
+
+    num_rows = csr.num_rows
+    r0 = b * block_rows
+    r1 = min(r0 + block_rows, num_rows)
+    sub_ptr = csr.row_ptr[r0:r1 + 1]
+    blk_nnz = row_nnz_host[r0:r1]
+    if strat == "full":
+        width = int(blk_nnz.max()) if len(blk_nnz) else 0
+        fn = sample_csr_to_ell_sfs           # first-W == all when W >= max nnz
+    else:
+        fn = STRATEGIES[strat]
+    width = max(int(width), 1)
+    if csr.nnz == 0 or r1 <= r0:
+        v = jnp.zeros((r1 - r0, width), csr.val.dtype)
+        c = jnp.zeros((r1 - r0, width), jnp.int32)
+    else:
+        v, c = fn(sub_ptr, csr.col_ind, csr.val, width)
+    pad = block_rows - (r1 - r0)
+    if pad:
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+    return v, c, ell_live_widths(v, c), width, (
+        "full" if strat == "full" else strat)
+
+
 def sample_csr_to_block_ell(csr, configs, block_rows: int):
     """Stitch a mixed-width :class:`~repro.core.graph.BlockELL` from a CSR.
 
@@ -214,7 +262,7 @@ def sample_csr_to_block_ell(csr, configs, block_rows: int):
       arrays through the sliced ``row_ptr``, so no per-block copy of the
       edge arrays is made.
     """
-    from repro.core.graph import BlockELL, ell_live_widths
+    from repro.core.graph import BlockELL
 
     num_rows = csr.num_rows
     num_blocks = max(-(-num_rows // block_rows), 1)
@@ -226,30 +274,13 @@ def sample_csr_to_block_ell(csr, configs, block_rows: int):
     row_nnz_host = np.asarray(csr.row_ptr[1:]) - np.asarray(csr.row_ptr[:-1])
     vals, cols, lives, widths, strategies = [], [], [], [], []
     for b, (strat, width) in enumerate(configs):
-        r0 = b * block_rows
-        r1 = min(r0 + block_rows, num_rows)
-        sub_ptr = csr.row_ptr[r0:r1 + 1]
-        blk_nnz = row_nnz_host[r0:r1]
-        if strat == "full":
-            width = int(blk_nnz.max()) if len(blk_nnz) else 0
-            fn = sample_csr_to_ell_sfs       # first-W == all when W >= max nnz
-        else:
-            fn = STRATEGIES[strat]
-        width = max(int(width), 1)
-        if csr.nnz == 0 or r1 <= r0:
-            v = jnp.zeros((r1 - r0, width), csr.val.dtype)
-            c = jnp.zeros((r1 - r0, width), jnp.int32)
-        else:
-            v, c = fn(sub_ptr, csr.col_ind, csr.val, width)
-        pad = block_rows - (r1 - r0)
-        if pad:
-            v = jnp.pad(v, ((0, pad), (0, 0)))
-            c = jnp.pad(c, ((0, pad), (0, 0)))
-        lives.append(ell_live_widths(v, c))
+        v, c, live, w, s = sample_block_segment(
+            csr, row_nnz_host, b, strat, width, block_rows)
+        lives.append(live)
         vals.append(v.reshape(-1))
         cols.append(c.reshape(-1))
-        widths.append(width)
-        strategies.append("full" if strat == "full" else strat)
+        widths.append(w)
+        strategies.append(s)
 
     # Trailing max-width zero pad: lets the block kernel's fixed-size row
     # DMA read past the last segment without a per-request jnp.pad copy

@@ -268,17 +268,32 @@ class GNNServer:
         self.features = jnp.asarray(features, jnp.float32)
         self.shards = partition_csr(csr, self.num_shards)
         self.mesh_shape = (self.num_shards,)
+        self._quant = quant
+        self._tune_kwargs = dict(tune_kwargs or {})
+        self._requested_devices = devices
+        self._max_buckets = max_buckets
         self.plans = plan_shards(
             self.shards, self.features, mesh_shape=self.mesh_shape,
             quant=quant, cache=self.cache, tune_kwargs=tune_kwargs)
+        self._prepare_execution()
 
+        self._queue: list = []
+        self._closed = False
+        self.stats = {"requests": 0, "flushes": 0, "sharded_passes": 0,
+                      "rows_served": 0, "edge_updates": 0}
+
+    def _prepare_execution(self) -> None:
+        """(Re)build the mode-specific execution state from the current
+        ``self.shards`` / ``self.plans`` — called at init and again after
+        :meth:`apply_edge_updates` swaps patched shards/plans in."""
         self._bundle = None
-        if mode == "spmd":
+        if self.mode == "spmd":
             self._bundle = _SpmdBundle(self.shards, self.plans,
-                                       self.features, max_buckets)
+                                       self.features, self._max_buckets)
             self._devices = None
         else:
-            self._devices = shard_devices(self.num_shards, devices)
+            self._devices = shard_devices(self.num_shards,
+                                          self._requested_devices)
             self.plans = [_device_put_plan(p, d)
                           for p, d in zip(self.plans, self._devices)]
             # One-time tuned-operand verification per shard, so the
@@ -307,10 +322,30 @@ class GNNServer:
                 dataclasses.replace(p, quantized=None, features_fp="")
                 if p.quantized is not None else p for p in self.plans]
 
-        self._queue: list = []
-        self._closed = False
-        self.stats = {"requests": 0, "flushes": 0, "sharded_passes": 0,
-                      "rows_served": 0}
+    def apply_edge_updates(self, additions=(), deletions=()) -> dict:
+        """Patch the live deployment for a graph edge delta.
+
+        Routes the global delta to the shards owning the touched rows
+        (``repro.serving.plans.apply_edge_updates_sharded``): those shards'
+        plans are patched in place (or, on halo growth, re-tuned), every
+        other shard's plan is untouched, and the execution state (device
+        placement, resident operands, the spmd bundle) is rebuilt from the
+        swapped-in shards/plans.  Pending submitted tickets are served by
+        the *patched* graph at the next ``flush()``.
+
+        Returns the routing report (patched/retuned/untouched shard ids +
+        per-shard ``DeltaReport``\\s).
+        """
+        from repro.serving.plans import apply_edge_updates_sharded
+
+        self.shards, self.plans, report = apply_edge_updates_sharded(
+            self.shards, self.plans, additions, deletions,
+            features=self.features, mesh_shape=self.mesh_shape,
+            quant=self._quant, cache=self.cache,
+            tune_kwargs=self._tune_kwargs)
+        self._prepare_execution()
+        self.stats["edge_updates"] += 1
+        return report
 
     # -- submission ------------------------------------------------------
 

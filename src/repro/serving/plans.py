@@ -22,7 +22,11 @@ later bring-ups their shrunken measurement budget.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
 
 from repro.serving.partition import CSRShard
 from repro.tuning.plan_cache import (BlockedPlan, PlanCache,
@@ -100,3 +104,181 @@ def plan_shards(shards: Sequence[CSRShard], features, *,
     return [plan_shard(s, features, mesh_shape=mesh_shape, quant=quant,
                        cache=cache, tune_kwargs=tune_kwargs)
             for s in shards]
+
+
+# ---------------------------------------------------------------------------
+# Incremental maintenance: route edge deltas to the shards owning them.
+# ---------------------------------------------------------------------------
+
+def route_edge_deltas(shards: Sequence[CSRShard], additions=(),
+                      deletions=()) -> list[tuple[list, list]]:
+    """Group global ``(row, col[, val])`` deltas by owning shard.
+
+    Row partitioning makes ownership trivial: the shard whose row range
+    contains ``row`` owns the edge (its accumulation is shard-local), so a
+    delta batch fans out into independent per-shard delta batches — shards
+    owning no touched rows keep their plans untouched.
+
+    Returns one ``(additions, deletions)`` pair per shard, in *global*
+    coordinates (translation to shard-local column space happens in
+    :func:`apply_edge_updates_sharded`, which knows each shard's halo).
+    """
+    from repro.core.graph import _parse_deltas
+
+    add_r, add_c, add_v = _parse_deltas(additions, "additions")
+    del_r, del_c, _ = _parse_deltas(deletions, "deletions")
+    out: list[tuple[list, list]] = []
+    for sh in shards:
+        a = (add_r >= sh.row_start) & (add_r < sh.row_stop)
+        d = (del_r >= sh.row_start) & (del_r < sh.row_stop)
+        out.append((
+            [(int(r), int(c), float(v)) for r, c, v in
+             zip(add_r[a], add_c[a], add_v[a])],
+            [(int(r), int(c)) for r, c in zip(del_r[d], del_c[d])],
+        ))
+    owned = sum(len(a) + len(d) for a, d in out)
+    if owned != len(add_r) + len(del_r):
+        raise ValueError("deltas reference rows outside every shard's range")
+    return out
+
+
+def _translate_local(shard: CSRShard, entries, *, with_val: bool):
+    """Global delta tuples -> shard-local ``(row, col[, val])`` tuples, plus
+    the global column ids that are neither local nor in the shard's halo
+    (``missing`` — non-empty means the halo must grow first)."""
+    n_local = shard.num_local
+    halo = shard.halo_ids
+    out, missing = [], []
+    for e in entries:
+        r, c = int(e[0]), int(e[1])
+        lr = r - shard.row_start
+        if shard.row_start <= c < shard.row_stop:
+            lc = c - shard.row_start
+        else:
+            pos = int(np.searchsorted(halo, c))
+            if pos < len(halo) and int(halo[pos]) == c:
+                lc = n_local + pos
+            else:
+                missing.append(c)
+                continue
+        out.append((lr, lc, float(e[2])) if with_val else (lr, lc))
+    return out, missing
+
+
+def _extend_halo(shard: CSRShard, new_cols) -> CSRShard:
+    """Grow a shard's halo to cover ``new_cols`` (global ids), remapping the
+    local CSR's column space and gather index in one vectorized pass.
+
+    Halo ids are kept sorted, so existing halo columns shift to their new
+    positions; the shard's per-row edge order (and therefore its SpMM
+    accumulation order) is preserved.
+    """
+    from repro.core.graph import CSR
+
+    n_local = shard.num_local
+    new_halo = np.union1d(shard.halo_ids,
+                          np.asarray(sorted(set(new_cols)), np.int64))
+    cols = np.asarray(shard.csr.col_ind, np.int64)
+    halo_map = n_local + np.searchsorted(new_halo, shard.halo_ids)
+    remapped = np.where(cols < n_local, cols,
+                        halo_map[np.clip(cols - n_local, 0, None)])
+    csr = CSR(shard.csr.row_ptr, jnp.asarray(remapped.astype(np.int32)),
+              shard.csr.val, num_cols=n_local + len(new_halo))
+    gather = np.concatenate([
+        np.arange(shard.row_start, shard.row_stop, dtype=np.int64), new_halo])
+    return dataclasses.replace(shard, csr=csr, halo_ids=new_halo,
+                               gather_index=gather)
+
+
+def apply_edge_updates_sharded(shards: Sequence[CSRShard],
+                               plans: Sequence[BlockedPlan],
+                               additions=(), deletions=(), features=None, *,
+                               mesh_shape: Sequence[int] | None = None,
+                               quant: Optional[int] = None,
+                               cache: PlanCache | None = None,
+                               tune_kwargs: dict | None = None):
+    """Apply a global edge delta to a sharded serving deployment.
+
+    Each shard owning touched rows is handled by the cheapest sufficient
+    path:
+
+      * **patch** — all referenced columns already exist in the shard's
+        local+halo space: ``repro.tuning.incremental.apply_edge_updates``
+        patches the shard's cached plan in place (touched blocks only, no
+        measurement).  Deletions always patch — a deleted edge may leave
+        its halo id unreferenced, which costs one stale gather row, not
+        correctness.
+      * **re-tune** — an addition references a column outside the halo:
+        every remapped column id past the insertion point shifts, so the
+        shard is rebuilt with the extended halo (:func:`_extend_halo`) and
+        its plan re-tuned cold (``refresh=True``).  Rare in practice: new
+        edges mostly land inside a shard or its existing neighborhood.
+      * **untouched** — shards owning no touched rows keep shard and plan
+        by identity (their fingerprints never move).
+
+    Args:
+      shards / plans: the current deployment (aligned lists).
+      additions / deletions: global ``(row, col[, val])`` / ``(row, col)``
+        deltas (``repro.core.graph.apply_csr_deltas`` semantics).
+      features: the *global* feature matrix (required when plans are
+        quantized; each shard patches/re-tunes against its own gather).
+      mesh_shape / quant / cache / tune_kwargs: as in :func:`plan_shard` —
+        pass the same values the deployment was planned with, so patched
+        and re-tuned shards stay on the original grid.
+
+    Returns ``(new_shards, new_plans, report)`` where ``report`` maps
+    ``"patched"`` / ``"retuned"`` / ``"untouched"`` to shard-index lists
+    and ``"reports"`` to the per-shard ``DeltaReport`` of each patched
+    shard.
+    """
+    from repro.tuning.incremental import apply_edge_updates
+
+    kw = dict(tune_kwargs or {})
+    if quant is not None:
+        kw.setdefault("quant", quant)
+    patch_kw = {k: kw[k] for k in ("widths", "strategies", "include_full",
+                                   "max_buckets", "accuracy_weight",
+                                   "machine") if k in kw}
+    routed = route_edge_deltas(shards, additions, deletions)
+    new_shards, new_plans = list(shards), list(plans)
+    report = {"patched": [], "retuned": [], "untouched": [], "reports": {}}
+    for i, (sh, plan, (adds, dels)) in enumerate(
+            zip(shards, plans, routed)):
+        if not adds and not dels:
+            report["untouched"].append(i)
+            continue
+        l_adds, missing = _translate_local(sh, adds, with_val=True)
+        l_dels, missing_del = _translate_local(sh, dels, with_val=False)
+        if missing_del:
+            # a deletion's column must already be addressable — otherwise
+            # the edge cannot exist in this shard
+            raise ValueError(
+                f"deletion column(s) {sorted(set(missing_del))[:4]} not in "
+                f"shard {i}'s local+halo space (edge not present)")
+        sm = shard_meta_for(sh, mesh_shape)
+        if missing:
+            # halo growth: remapped ids shift — rebuild shard, re-tune cold
+            from repro.core.graph import apply_csr_deltas
+            from repro.tuning.autotune import tune_blocked
+
+            sh = _extend_halo(sh, missing)
+            l_adds, still = _translate_local(sh, adds, with_val=True)
+            l_dels, _ = _translate_local(sh, dels, with_val=False)
+            assert not still, "halo extension missed columns"
+            new_csr, _ = apply_csr_deltas(sh.csr, l_adds, l_dels)
+            sh = dataclasses.replace(sh, csr=new_csr)
+            feats = sh.gather(features) if features is not None else None
+            new_plans[i] = tune_blocked(new_csr, feats, cache=cache,
+                                        shard_meta=sm, refresh=True, **kw)
+            new_shards[i] = sh
+            report["retuned"].append(i)
+        else:
+            feats = sh.gather(features) if features is not None else None
+            patched, new_csr, rep = apply_edge_updates(
+                plan, sh.csr, l_adds, l_dels, features=feats,
+                cache=cache, **patch_kw)
+            new_plans[i] = patched
+            new_shards[i] = dataclasses.replace(sh, csr=new_csr)
+            report["patched"].append(i)
+            report["reports"][i] = rep
+    return new_shards, new_plans, report

@@ -56,10 +56,20 @@ automatically use the least-squares-fitted ``MachineModel``
 correlation shrinks the measurement budget (``effective_budget``).  CLI:
 ``python -m repro.tuning.calibration fit|show|clear`` (``--smoke`` for CI).
 
-Entry points: ``tune``, ``tune_blocked``, ``TunedPlan``, ``BlockedPlan``,
-``PlanCache``, ``PLAN_SCHEMA_VERSION``, ``CandidateConfig``,
-``extract_features``, ``extract_block_features``, ``fingerprint``,
-``CalibrationLog``, ``fit_machine_model``, ``calibrated_machine_model``.
+Incremental maintenance (**incremental.py**): production graphs mutate, so
+``apply_edge_updates(plan, csr, additions, deletions)`` patches a cached
+``BlockedPlan`` for an edge delta instead of re-tuning: only the touched
+row blocks are re-ranked and re-sampled (untouched segments splice through
+from the cached operand), only touched feature rows re-quantize, and the
+fingerprint rolls forward from the plan's stored per-block digests —
+landing bit-identically on what a cold tune of the patched graph would
+produce, >10x faster (``benchmarks/incremental_update.py``).
+
+Entry points: ``tune``, ``tune_blocked``, ``apply_edge_updates``,
+``DeltaReport``, ``TunedPlan``, ``BlockedPlan``, ``PlanCache``,
+``PLAN_SCHEMA_VERSION``, ``CandidateConfig``, ``extract_features``,
+``extract_block_features``, ``fingerprint``, ``CalibrationLog``,
+``fit_machine_model``, ``calibrated_machine_model``.
 """
 from repro.tuning.cost_model import (CandidateConfig, CostEstimate,
                                      MachineModel, RooflineTerms,
@@ -92,6 +102,10 @@ def __getattr__(name):
         from repro.tuning.autotune import tune_blocked
 
         return tune_blocked
+    if name in ("apply_edge_updates", "DeltaReport"):
+        from repro.tuning import incremental
+
+        return getattr(incremental, name)
     if name in _CALIBRATION_EXPORTS:
         from repro.tuning import calibration
 
@@ -101,11 +115,11 @@ def __getattr__(name):
 
 __all__ = [
     "BlockedPlan", "CalibrationLog", "CandidateConfig", "CostEstimate",
-    "GraphFeatures", "MachineModel", "PLAN_SCHEMA_VERSION", "PlanCache",
-    "RooflineTerms", "TunedPlan", "calibrated_machine_model",
-    "default_cache", "default_grid", "extract_block_features",
-    "extract_features", "features_from_row_nnz", "fingerprint",
-    "fit_machine_model", "host_fingerprint", "normalize_shard_meta",
-    "predict", "rank", "reset_default_cache", "roofline_terms", "spearman",
-    "tune", "tune_blocked",
+    "DeltaReport", "GraphFeatures", "MachineModel", "PLAN_SCHEMA_VERSION",
+    "PlanCache", "RooflineTerms", "TunedPlan", "apply_edge_updates",
+    "calibrated_machine_model", "default_cache", "default_grid",
+    "extract_block_features", "extract_features", "features_from_row_nnz",
+    "fingerprint", "fit_machine_model", "host_fingerprint",
+    "normalize_shard_meta", "predict", "rank", "reset_default_cache",
+    "roofline_terms", "spearman", "tune", "tune_blocked",
 ]

@@ -223,14 +223,18 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
 
     Returns the cached or freshly built :class:`BlockedPlan`.
     """
-    from repro.core.graph import partition_width_buckets
+    from repro.core.graph import (combine_block_digests, csr_block_digests,
+                                  partition_width_buckets)
     from repro.core.quantization import (QuantizedFeatures, as_quantized,
                                          dequantize)
     from repro.core.sampling import sample_csr_to_block_ell
 
     cache = cache if cache is not None else default_cache()
     shard_meta = normalize_shard_meta(shard_meta)
-    fp = features_mod.fingerprint(csr)
+    # one digest pass serves both the cache key and the plan's stored
+    # per-block digests (what apply_edge_updates rolls forward on a delta)
+    digests = csr_block_digests(csr)
+    fp = combine_block_digests(digests, csr.num_rows, csr.num_cols)
     plan = None if refresh \
         else cache.get(fp, kind="block", shard_meta=shard_meta)
     if plan is not None:
@@ -345,7 +349,8 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                        buckets=buckets,
                        predicted_us=predicted_us,
                        measured_bucket_us=bucket_us,
-                       shard_meta=shard_meta)
+                       shard_meta=shard_meta,
+                       block_digests=tuple(digests))
     if measure_plan:
         plan.measured_spmm_us = measure.time_us(
             plan.run, features, warmup=warmup, iters=iters)

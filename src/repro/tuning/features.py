@@ -8,16 +8,20 @@ plan cache.
 
 The fingerprint hashes the exact CSR arrays (structure *and* values), so two
 graphs share a plan only when the sampled ELL operand would be bit-identical.
+Since PR 7 it is defined as a *combination of fixed-granularity per-row-block
+digests* (``repro.core.graph.csr_block_digests``) rather than one flat hash:
+an edge delta only dirties the digests of the blocks it touches, so the
+incremental plan-maintenance path can roll the fingerprint forward without
+re-hashing the full CSR — and lands on exactly the key a cold tune computes.
 """
 from __future__ import annotations
 
-import hashlib
 from dataclasses import dataclass, field
 from typing import Sequence
 
 import numpy as np
 
-from repro.core.graph import CSR
+from repro.core.graph import CSR, combine_block_digests, csr_block_digests
 
 # log2 buckets: bucket b counts rows with row_nnz in [2^b, 2^(b+1)).
 # 2^31 caps any realistic degree; empty rows get their own implicit bucket
@@ -28,15 +32,14 @@ _NUM_BUCKETS = 32
 def fingerprint(csr: CSR) -> str:
     """Content hash of a CSR matrix — the plan-cache key.
 
-    blake2b over shapes + the three raw arrays.  O(nnz) but pure memory
-    traffic; negligible next to one SpMM over the same data.
+    blake2b folded over :data:`~repro.core.graph.DIGEST_BLOCK_ROWS`-row
+    block digests (structure *and* values).  O(nnz) but pure memory
+    traffic; negligible next to one SpMM over the same data — and
+    incrementally maintainable: patching the touched blocks' digests and
+    re-combining reproduces this value exactly.
     """
-    h = hashlib.blake2b(digest_size=16)
-    h.update(np.int64([csr.num_rows, csr.num_cols, csr.nnz]).tobytes())
-    h.update(np.ascontiguousarray(np.asarray(csr.row_ptr)).tobytes())
-    h.update(np.ascontiguousarray(np.asarray(csr.col_ind)).tobytes())
-    h.update(np.ascontiguousarray(np.asarray(csr.val)).tobytes())
-    return h.hexdigest()
+    return combine_block_digests(
+        csr_block_digests(csr), csr.num_rows, csr.num_cols)
 
 
 @dataclass(frozen=True)
@@ -140,8 +143,8 @@ def extract_features(csr: CSR, feat_dim: int = 64,
         fp=fingerprint(csr) if with_fingerprint else "")
 
 
-def extract_block_features(csr: CSR, block_rows: int,
-                           feat_dim: int = 64) -> list[GraphFeatures]:
+def extract_block_features(csr: CSR, block_rows: int, feat_dim: int = 64,
+                           blocks=None) -> list[GraphFeatures]:
     """Blocked variant of :func:`extract_features`: one ``GraphFeatures``
     per fixed-size row block, still one O(nnz) host pass overall.
 
@@ -150,20 +153,24 @@ def extract_block_features(csr: CSR, block_rows: int,
       block_rows: rows per block; the last block may be short (its
         statistics cover only the real rows).
       feat_dim: dense-operand width, as in :func:`extract_features`.
+      blocks: optional iterable of block ids to summarize (default: all
+        blocks).  The delta path uses this to re-rank only touched blocks.
 
-    Returns ``ceil(num_rows / block_rows)`` feature records (at least one,
-    empty-graph safe).  Fingerprints are left blank — blocked plans are
-    keyed by the whole-graph fingerprint, not per block.
+    Returns feature records aligned with ``blocks`` (by default
+    ``ceil(num_rows / block_rows)`` of them, at least one, empty-graph
+    safe).  Fingerprints are left blank — blocked plans are keyed by the
+    whole-graph fingerprint, not per block.
     """
     row_ptr = np.asarray(csr.row_ptr)
     row_nnz = (row_ptr[1:] - row_ptr[:-1]).astype(np.int64)
     num_rows = len(row_nnz)
-    num_blocks = max(-(-num_rows // block_rows), 1)
+    if blocks is None:
+        blocks = range(max(-(-num_rows // block_rows), 1))
     return [
         _stats_from_row_nnz(
-            row_nnz[b * block_rows:(b + 1) * block_rows],
+            row_nnz[int(b) * block_rows:(int(b) + 1) * block_rows],
             csr.num_cols, feat_dim)
-        for b in range(num_blocks)
+        for b in blocks
     ]
 
 

@@ -80,7 +80,12 @@ _ENV_DISK_MAX = "REPRO_PLAN_CACHE_DISK_MAX"
 #: v4: entries gained ``shard_meta`` (mesh shape, shard index, num shards)
 #: so per-shard serving plans cannot be confused with whole-graph ones —
 #: v3 entries carry no shard discriminator and are rejected.
-PLAN_SCHEMA_VERSION = 4
+#: v5: the fingerprint became a combination of per-row-block content
+#: digests (``repro.core.graph.csr_block_digests``) and blocked entries
+#: gained ``block_digests`` + ``version`` for incremental plan maintenance
+#: (``repro.tuning.incremental``) — v4 entries were keyed by the old flat
+#: hash and can never be hit under the new keys, so they are rejected.
+PLAN_SCHEMA_VERSION = 5
 
 _DEFAULT_MAX_PLANS = 64
 
@@ -167,6 +172,15 @@ class BlockedPlan:
     of the bucket max.  ``quantized`` (when set) is the pre-quantized
     feature matrix the plan serves through the fused-dequant gather, guarded
     by ``features_fp`` exactly like :class:`TunedPlan`.
+
+    ``block_digests`` are the fixed-granularity CSR content digests the
+    plan's fingerprint combines (``repro.core.graph.csr_block_digests``);
+    carrying them in the plan is what lets ``apply_edge_updates`` roll the
+    fingerprint forward after an edge delta by re-digesting only touched
+    blocks.  ``version`` counts applied patches (0 == cold tune) — the
+    atomic tmp+rename disk write makes each patched version a single
+    all-or-nothing swap, so a concurrent loader sees version N or N+1,
+    never a torn mix.
     """
 
     bell: BlockELL
@@ -179,6 +193,8 @@ class BlockedPlan:
     measured_spmm_us: float = 0.0
     measured_bucket_us: tuple = ()  # per-bucket microbench, aligned w/ buckets
     shard_meta: Optional[tuple] = None  # (mesh_shape, shard_idx, num_shards)
+    block_digests: tuple = ()       # DIGEST_BLOCK_ROWS-granularity CSR digests
+    version: int = 0                # bumped by each apply_edge_updates patch
 
     kind = "block"
 
@@ -403,6 +419,8 @@ class PlanCache:
                 "measured_spmm_us": plan.measured_spmm_us,
                 "measured_bucket_us": [float(u)
                                        for u in plan.measured_bucket_us],
+                "block_digests": list(plan.block_digests),
+                "version": int(plan.version),
             }
             arrays = {
                 "bell_val": np.asarray(plan.bell.val),
@@ -526,7 +544,10 @@ class PlanCache:
                         measured_bucket_us=tuple(
                             float(u)
                             for u in meta.get("measured_bucket_us", [])),
-                        shard_meta=shard_meta)
+                        shard_meta=shard_meta,
+                        block_digests=tuple(
+                            str(d) for d in meta.get("block_digests", [])),
+                        version=int(meta.get("version", 0)))
                     self._touch(path)
                     return plan
                 ell = ELL(jnp.asarray(z["ell_val"]), jnp.asarray(z["ell_col"]),

@@ -349,6 +349,73 @@ def _path_serve_runtime(name):
     _close(got1, 2.0 * want, label="scaled-operand")
 
 
+def _delta_for(g):
+    """Deterministic edge delta for ``g``: every 3rd distinct existing
+    pair deleted (<= 8), first-absent cols added across spread rows."""
+    rp = np.asarray(g.row_ptr)
+    ci = np.asarray(g.col_ind)
+    rows = np.repeat(np.arange(g.num_rows), rp[1:] - rp[:-1])
+    pairs = list(dict.fromkeys(
+        (int(r), int(c)) for r, c in zip(rows, ci)))
+    dels = pairs[::3][:8]
+    eset, adds, c = set(pairs), [], 0
+    for r in range(0, g.num_rows, 5):
+        while (r, c) in eset or (r, c) in set(adds):
+            c = (c + 1) % g.num_cols
+        adds.append((r, c))
+        c = (c + 3) % g.num_cols
+    return adds[:6], dels
+
+
+def _path_delta_patched(name):
+    """``apply_edge_updates`` on a cached blocked plan: the patched plan
+    must be byte-identical to a cold ``tune_blocked`` of the patched
+    graph, its SpMM must match the patched dense ground truth, and the
+    plan cache must serve it under the rolled-forward fingerprint."""
+    from repro.tuning.autotune import tune_blocked
+    from repro.tuning.incremental import apply_edge_updates
+
+    g, x, _ = _case(name)
+    adds, dels = _delta_for(g)
+    w = _wmax(g) + 1          # +1: each addition grows a row by one edge
+    tk = dict(block_rows=16, widths=(w, 2 * w), include_full=True,
+              measure_plan=False, measure_buckets=False)
+    cache = PlanCache()
+    plan = tune_blocked(g, x, cache=cache, **tk)
+    patched, new_csr, report = apply_edge_updates(
+        plan, g, adds, dels, widths=tk["widths"], features=x, cache=cache)
+
+    assert report.num_additions == len(adds)
+    assert report.num_deletions == len(dels)
+    assert patched.version == plan.version + 1
+
+    cold = tune_blocked(new_csr, x, cache=None, refresh=True, **tk)
+    assert patched.fingerprint == cold.fingerprint
+    assert patched.bell.widths == cold.bell.widths
+    assert patched.bell.strategies == cold.bell.strategies
+    assert np.array_equal(np.asarray(patched.bell.val),
+                          np.asarray(cold.bell.val))
+    assert np.array_equal(np.asarray(patched.bell.col),
+                          np.asarray(cold.bell.col))
+
+    want = np.asarray(csr_to_dense(new_csr) @ x)
+    _close(patched.run(x), want, rtol=1e-4, atol=1e-4, label="patched-run")
+    _close(ref.block_ell_spmm(patched.bell, np.asarray(x)), want,
+           rtol=1e-4, atol=1e-4, label="patched-ref")
+
+    hit = cache.get(patched.fingerprint, "block")
+    assert hit is not None and hit.version == patched.version
+
+    # a second roll on top of the patch must still match a cold tune
+    adds2, dels2 = _delta_for(new_csr)
+    patched2, csr2, _ = apply_edge_updates(
+        patched, new_csr, adds2, dels2, widths=tk["widths"], features=x)
+    cold2 = tune_blocked(csr2, x, cache=None, refresh=True, **tk)
+    assert patched2.fingerprint == cold2.fingerprint
+    assert np.array_equal(np.asarray(patched2.bell.val),
+                          np.asarray(cold2.bell.val))
+
+
 def _path_serve_matches_block_plan(name):
     """Sharded output == the single-device blocked plan, same knobs."""
     g, x, _ = _case(name)
@@ -372,6 +439,7 @@ _PATHS = {
     "auto-graph": _path_auto_graph,
     "auto-block": _path_auto_block,
     "auto-block-quant": _path_auto_block_quant,
+    "delta-patched": _path_delta_patched,
     "serve-loop": _path_serve_loop,
     "serve-loop-quant": _path_serve_loop_quant,
     "serve-runtime": _path_serve_runtime,
