@@ -8,7 +8,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (accuracy_vs_w, autotune_gain, block_tuning_gain,
-                            calibration_gain, incremental_update,
+                            calibration_gain, fused_layer, incremental_update,
                             kernel_blocks, kernel_speedup, motivation,
                             quant_block_gain, quant_loading, sampling_cdf,
                             serving_throughput)
@@ -30,6 +30,9 @@ def main() -> None:
     # plan patching vs cold re-tune for a 1% edge delta
     # (-> BENCH_incremental.json, gate: parity + >10x)
     incremental_update.run()
+    # fused layer kernel vs unfused 2-layer GCN
+    # (-> BENCH_fused.json, gate: parity + speedup>1 + bytes win)
+    fused_layer.run()
     try:
         from benchmarks import roofline
         roofline.report()

@@ -77,7 +77,7 @@ def aes_spmm(csr: CSR, features, sh_width: int = 128, *,
 
     Returns f32[num_rows, feat].
     """
-    from repro.kernels import ops, ref
+    from repro.kernels import ops
 
     if granularity not in ("graph", "block"):
         raise ValueError(f"unknown granularity {granularity!r} "
@@ -123,16 +123,16 @@ def aes_spmm(csr: CSR, features, sh_width: int = 128, *,
     ell = sample(csr, sh_width, strategy,
                  backend="jax" if backend == "ref" else backend)
 
-    if backend == "ref":
-        return ref.ell_spmm_rowloop(ell.val, ell.col, features)
-    if backend == "jax":
-        return ref.ell_spmm_rowloop(ell.val, ell.col, features)
-    if backend == "pallas":
-        if quantized is not None:
-            # beyond-paper: dequant fused into the B-row gather
-            return ops.ell_spmm(
-                ell, quantized.q,
-                quantized_meta=(quantized.scale, quantized.x_min),
-                interpret=interpret)
-        return ops.ell_spmm(ell, features, interpret=interpret)
-    raise ValueError(f"unknown backend {backend!r}")
+    if backend not in ("ref", "jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    from repro.exec import PlanExecutor
+
+    # beyond-paper: on the pallas backend the dequant is fused into the
+    # B-row gather.  requant_guard re-encodes `features` with the stored
+    # range (bit-exact when features IS the matrix `quantized` encodes) so
+    # a hidden-layer activation is never served stale int8 data — it
+    # re-quantizes in range, or falls back to the float gather on drift.
+    return PlanExecutor(interpret=interpret).run_ell(
+        ell, features, backend="jax" if backend == "ref" else backend,
+        quantized=quantized if backend == "pallas" else None,
+        requant_guard=True)

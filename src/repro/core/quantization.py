@@ -98,6 +98,33 @@ def requantize_rows(qf: QuantizedFeatures, rows, values) -> QuantizedFeatures:
     return qf._replace(q=q)
 
 
+def requantize_within_range(qf: QuantizedFeatures, x) -> QuantizedFeatures | None:
+    """Re-encode a *full* matrix ``x`` (Eq. 1) with ``qf``'s stored range,
+    or return ``None`` when the range no longer covers it.
+
+    This is the drift guard for serving quantized operands that were not
+    the one quantized offline — e.g. a hidden-layer activation fed back
+    through a quantized execution path.  Values within half a quantization
+    step of the boundary round to it anyway (the reconstruction error
+    bound ``scale/2`` is unchanged), so that much overhang is tolerated;
+    past it, clipping to the stored ``(x_min, x_max)`` would silently lose
+    information and the caller must fall back to the float path.
+
+    ``x`` need not share ``qf``'s shape — only its value range matters —
+    so a ``[nodes, hidden]`` activation can ride a plan quantized from the
+    ``[nodes, feat]`` input.  For ``x == dequantize(qf)`` the round trip
+    is bit-exact (each reconstructed level re-encodes to itself), which is
+    what makes this safe to apply unconditionally on the first layer.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    half_step = qf.scale * 0.5
+    drift = (x.min() < qf.x_min - half_step) | (x.max() > qf.x_max + half_step)
+    if bool(drift):
+        return None
+    return QuantizedFeatures(q=_quantize(x, qf.x_min, qf.x_max, qf.bits),
+                             x_min=qf.x_min, x_max=qf.x_max, bits=qf.bits)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "dtype"))
 def dequantize_arrays(q, x_min, x_max, bits: int, dtype=jnp.float32):
     """Eq. 2 on raw arrays (used by the Pallas dequant kernel's oracle)."""

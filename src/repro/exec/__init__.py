@@ -1,0 +1,4 @@
+"""Unified SpMM execution dispatch (see :mod:`repro.exec.executor`)."""
+from repro.exec.executor import PlanExecutor, default_executor
+
+__all__ = ["PlanExecutor", "default_executor"]

@@ -17,6 +17,7 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
              quantize_bits: Optional[int] = None,
              granularity: str = "graph",
              shards: Optional[int] = None,
+             fuse_layers: bool = False,
              plan_cache=None, tune_kwargs=None) -> float:
     """Test accuracy under the given kernel configuration.
 
@@ -38,10 +39,30 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
     tests compare against).  ``quantize_bits`` then pre-quantizes each
     shard's operand; hidden-layer activations take the per-shard float
     path.
+
+    ``fuse_layers=True`` (GCN only) runs each layer — aggregation, dense
+    transform, activation — as one fused execution step through
+    ``repro.exec.PlanExecutor`` (one Pallas launch per layer on the
+    pallas backend: the aggregation intermediate never round-trips HBM).
+    Quantized inputs serve the fused int8 gather; hidden-layer
+    activations re-quantize within the stored range or fall back to
+    float on range drift.
     """
     _, fwd, adj_name = MODELS[model]
     adj = getattr(ds, adj_name)
     feats = ds.features
+
+    if fuse_layers:
+        if shards is not None:
+            raise ValueError("fuse_layers is a single-device path "
+                             "(incompatible with shards=)")
+        logits = _fused_gcn_logits(
+            adj, feats, model, params, sh_width=sh_width, strategy=strategy,
+            backend=backend, quantize_bits=quantize_bits,
+            granularity=granularity, plan_cache=plan_cache,
+            tune_kwargs=tune_kwargs)
+        return float(accuracy(logits, ds.labels,
+                              ds.test_mask.astype(jnp.float32)))
 
     if shards is not None:
         if strategy != "auto":
@@ -52,20 +73,23 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
         server = GNNServer(adj, feats, num_shards=shards,
                            quant=quantize_bits, cache=plan_cache,
                            tune_kwargs=tune_kwargs)
+        try:
+            def agg(csr, h):
+                if csr is not adj:
+                    raise ValueError(
+                        "sharded evaluate: the server is partitioned over "
+                        f"{adj_name}; a model aggregating another adjacency "
+                        "needs its own GNNServer")
+                # the server content-hash-dedupes operands equal to its
+                # feature matrix onto the cached (possibly quantized)
+                # fast path, so the first layer needs no identity check
+                return server.aggregate(h)
 
-        def agg(csr, h):
-            if csr is not adj:
-                raise ValueError(
-                    "sharded evaluate: the server is partitioned over "
-                    f"{adj_name}; a model aggregating another adjacency "
-                    "needs its own GNNServer")
-            # first layer aggregates the server's own feature matrix —
-            # the cached (possibly quantized) fast path
-            return server.aggregate(None if h is feats else h)
-
-        logits = fwd(params, adj, feats, agg)
-        return float(accuracy(logits, ds.labels,
-                              ds.test_mask.astype(jnp.float32)))
+            logits = fwd(params, adj, feats, agg)
+            return float(accuracy(logits, ds.labels,
+                                  ds.test_mask.astype(jnp.float32)))
+        finally:
+            server.close()
 
     if strategy == "auto":
         from repro.core.aes_spmm import aes_spmm
@@ -101,6 +125,64 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
     logits = fwd(params, adj, feats, agg)
     return float(accuracy(logits, ds.labels,
                           ds.test_mask.astype(jnp.float32)))
+
+
+def _fused_gcn_logits(adj, feats, model: str, params, *, sh_width: int,
+                      strategy: str, backend: str,
+                      quantize_bits: Optional[int], granularity: str,
+                      plan_cache, tune_kwargs):
+    """Forward pass for ``evaluate(..., fuse_layers=True)``: both GCN
+    layers through ``PlanExecutor.run_fused_layer`` over one sampled
+    operand.
+
+    Mirrors the unfused semantics exactly: ``strategy="auto"`` reuses the
+    tuned plan's ELL + (hash-guarded) quantized operand; manual
+    strategies sample once and optionally quantize.  Layer 2 feeds the
+    hidden activation back with the range guard — in-range activations
+    re-encode against the stored ``(x_min, x_max)``, drifted ones serve
+    the float gather.
+    """
+    if model != "gcn":
+        raise ValueError(
+            f"fuse_layers supports the 2-layer GCN forward only, not "
+            f"{model!r} (GraphSAGE's concat-self transform is not fused)")
+    if granularity != "graph":
+        raise ValueError('fuse_layers requires granularity="graph" '
+                         "(a fused layer runs one global ELL operand)")
+    from repro.exec import default_executor
+
+    executor = default_executor()
+    qf = None
+    if strategy == "auto":
+        from repro.tuning.autotune import tune
+        from repro.tuning.plan_cache import features_fingerprint
+
+        plan = tune(adj, feats, cache=plan_cache, **(tune_kwargs or {}))
+        ell = plan.ell
+        qf = plan.quantized
+        if qf is not None and features_fingerprint(feats) != plan.features_fp:
+            qf = None
+        layer_backend = plan.config.backend
+    else:
+        if backend not in ("ref", "jax", "pallas"):
+            raise ValueError(
+                f"fuse_layers supports backends 'ref'/'jax'/'pallas', "
+                f"not {backend!r}")
+        from repro.core.aes_spmm import sample
+
+        if quantize_bits is not None:
+            qf = quantize(feats, quantize_bits)
+            feats = dequantize(qf)
+        ell = sample(adj, sh_width, strategy,
+                     backend="jax" if backend == "ref" else backend)
+        layer_backend = "jax" if backend == "ref" else backend
+
+    h = executor.run_fused_layer(
+        ell, feats, params.w1, params.b1, relu=True, backend=layer_backend,
+        quantized=qf, requant_guard=qf is not None)
+    return executor.run_fused_layer(
+        ell, h, params.w2, params.b2, relu=False, backend=layer_backend,
+        quantized=qf, requant_guard=qf is not None)
 
 
 def inference_accuracy(ds: GraphDataset, model: str, params,

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: one whole GNN layer in a single launch.
+
+A GCN layer is ``relu(agg(A, X) @ W + b)`` — run as separate XLA ops the
+aggregation output ``agg(A, X)`` round-trips HBM between the SpMM and the
+dense transform, and a quantized deployment additionally pays a
+dequantize pass at the feature boundary.  This kernel fuses the whole
+layer per row tile:
+
+  * the sampled ``(val, col)`` tile and the per-row live widths stage in
+    VMEM via ``BlockSpec`` (same layout as ``ell_spmm.py``);
+  * each referenced B row is DMA'd from HBM with double buffering,
+    dequantized in the gather when the operand is int8
+    (``dequant_epilogue`` — the same Eq. 2 epilogue the unfused kernels
+    fuse), and accumulated into a VMEM row-tile aggregation buffer;
+  * the dense transform runs on the aggregation buffer *in VMEM*: one
+    ``[block_r, F] @ [F, H]`` MXU matmul + bias + (optional) ReLU, and
+    only the ``[block_r, H]`` layer output is ever written back to HBM.
+
+The aggregation intermediate never exists in HBM — per layer that saves
+one ``[rows, F]`` write plus one ``[rows, F]`` read against the unfused
+pipeline (the AKG/MindSpore CSR-fusion observation applied to the AES
+layout; GE-SpMM's coalesced gather is the row-DMA analogue).
+
+The grid is 1-D over row tiles only: the dense transform contracts over
+the full feature dimension, so F is not tiled — the layer weights
+``[F, H]`` must fit VMEM, which holds for GNN layer widths (the "small
+dense transform" regime this kernel targets; ``repro.kernels.ops``
+asserts the bound).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro.kernels.dequant import dequant_epilogue
+from repro.kernels.pallas_compat import pltpu
+
+
+def _fused_layer_kernel(val_ref, col_ref, live_ref, w_ref, bias_ref, b_ref,
+                        out_ref, agg, bsc, sem, *, block_r: int, feat: int,
+                        quantized: bool, scale: float, x_min: float,
+                        relu: bool):
+    """grid = (row_tiles,).
+
+    val_ref:  f32[block_r, W]    VMEM  sampled edge weights
+    col_ref:  i32[block_r, W]    VMEM  sampled column indices
+    live_ref: i32[block_r, 1]    VMEM  live width per row
+    w_ref:    f32[F, H]          VMEM  layer weights (padded)
+    bias_ref: f32[1, H]          VMEM  layer bias (padded)
+    b_ref:    [num_nodes, F]     HBM   dense features (f32 / uint8)
+    out_ref:  f32[block_r, H]    VMEM  layer output tile
+    agg:      VMEM[block_r, F]   aggregation buffer (never leaves VMEM)
+    bsc:      VMEM[2, 1, F]      double-buffered B-row landing zone
+    sem:      DMA semaphores [2]
+    """
+
+    def b_row_copy(c, slot):
+        return pltpu.make_async_copy(
+            b_ref.at[pl.ds(c, 1), pl.ds(0, feat)], bsc.at[slot],
+            sem.at[slot])
+
+    def row_body(r, _):
+        live_w = live_ref[r, 0]
+
+        @pl.when(live_w > 0)
+        def _():
+            b_row_copy(col_ref[r, 0], 0).start()
+
+        def k_body(k, acc):
+            slot = jax.lax.rem(k, 2)
+
+            @pl.when(k + 1 < live_w)
+            def _():
+                b_row_copy(col_ref[r, k + 1], jax.lax.rem(k + 1, 2)).start()
+
+            b_row_copy(col_ref[r, k], slot).wait()
+            row = bsc[slot, 0, :]
+            if quantized:
+                row = dequant_epilogue(row, scale, x_min)
+            return acc + val_ref[r, k] * row
+
+        acc = jax.lax.fori_loop(
+            0, live_w, k_body, jnp.zeros((feat,), jnp.float32))
+        pl.store(agg, (pl.ds(r, 1), slice(None)), acc[None, :])
+        return _
+
+    jax.lax.fori_loop(0, block_r, row_body, None)
+
+    # Dense transform epilogue on the VMEM-resident aggregation tile: one
+    # MXU matmul per row tile; only [block_r, H] reaches HBM.
+    h = jnp.dot(agg[...], w_ref[...],
+                preferred_element_type=jnp.float32) + bias_ref[0, :]
+    if relu:
+        h = jnp.maximum(h, 0.0)
+    out_ref[...] = h
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_r", "quantized", "scale", "x_min", "relu",
+                     "interpret"))
+def fused_layer(ell_val, ell_col, live_w, b, w, bias, *, block_r: int = 8,
+                quantized: bool = False, scale=1.0, x_min=0.0,
+                relu: bool = True, interpret: bool = True):
+    """out[r, :] = act(sum_k ell_val[r, k] * B[ell_col[r, k], :] @ W + bias).
+
+    Inputs must be padded: rows % block_r == 0, F and H % 128 == 0, and
+    W's rows padded to match B's columns (``repro.kernels.ops`` pads).
+    """
+    rows, width = ell_val.shape
+    feat = b.shape[1]
+    hidden = w.shape[1]
+    assert rows % block_r == 0 and w.shape[0] == feat
+
+    grid = (rows // block_r,)
+    kernel = functools.partial(
+        _fused_layer_kernel, block_r=block_r, feat=feat,
+        quantized=quantized, scale=scale, x_min=x_min, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((feat, hidden), lambda i: (0, 0)),
+            pl.BlockSpec((1, hidden), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_r, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_r, feat), jnp.float32),   # aggregation tile
+            pltpu.VMEM((2, 1, feat), b.dtype),          # B-row landing zone
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(ell_val, ell_col, live_w.reshape(rows, 1).astype(jnp.int32), w,
+      bias.reshape(1, hidden), b)

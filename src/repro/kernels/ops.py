@@ -19,7 +19,15 @@ from .aes_sample import aes_sample as _aes_sample_kernel
 from .dequant import dequantize as _dequant_kernel
 from .ell_spmm import block_ell_spmm as _block_ell_spmm_kernel
 from .ell_spmm import ell_spmm as _ell_spmm_kernel
+from .fused_layer import fused_layer as _fused_layer_kernel
 from .fused_spmm import fused_aes_spmm as _fused_kernel
+
+# The fused layer kernel holds its aggregation tile, the layer weights and
+# the double-buffered B rows in VMEM simultaneously; bound the padded
+# feature/hidden widths so a layer that cannot fit fails loudly instead of
+# spilling. ~2 MB of f32 at the defaults — comfortably inside one core's
+# VMEM alongside the [F, H] weights.
+_FUSED_LAYER_MAX_DIM = 2048
 
 
 def _interpret_default() -> bool:
@@ -165,6 +173,63 @@ def block_ell_spmm(bell: BlockELL, b, *, block_f: int = 128,
     out = jnp.zeros((bell.padded_rows, bp.shape[1]), jnp.float32)
     out = out.at[jnp.asarray(rows_idx, jnp.int32)].set(stacked)
     return out[:bell.num_rows, :feat]
+
+
+def fused_layer_spmm(ell: ELL, b, w, bias, live_w=None, *, relu: bool = True,
+                     block_r: int = 8, block_f: int = 128,
+                     quantized_meta=None, interpret=None):
+    """Pallas fused GNN layer: gather + (dequant) + SpMM + dense transform
+    + activation in one launch — the aggregation intermediate never
+    round-trips HBM.
+
+    Args:
+      ell: sampled operand (same contract as :func:`ell_spmm`).
+      b: dense operand [num_nodes, feat] — f32, or uint8 when
+        ``quantized_meta`` is given.
+      w: layer weights f32[feat, hidden].
+      bias: layer bias f32[hidden].
+      live_w: optional int32[rows] live-prefix lengths.
+      relu: apply ReLU after the bias add (False for a logits layer).
+      block_r / block_f: row-tile size and the feat/hidden pad multiple.
+      quantized_meta: ``(scale, x_min)`` enables the fused-dequant gather.
+      interpret: force Pallas interpret mode (default: interpret off-TPU).
+
+    Returns:
+      f32[rows, hidden] with
+      ``out[r] = act(sum_k ell.val[r, k] * B[ell.col[r, k]] @ W + bias)``.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    rows, width = ell.val.shape
+    feat = b.shape[1]
+    hidden = w.shape[1]
+    if w.shape[0] != feat:
+        raise ValueError(
+            f"weight rows {w.shape[0]} != operand features {feat}")
+    if live_w is None:
+        from repro.core.graph import ell_live_widths
+
+        live_w = ell_live_widths(ell.val, ell.col)
+    val = _pad_to(ell.val, block_r, 0)
+    col = _pad_to(ell.col, block_r, 0)
+    lw = _pad_to(live_w, block_r, 0)
+    # F and H both pad to the feature-tile multiple; padded B columns and
+    # padded W rows/columns are zero, so they contribute nothing to the
+    # matmul (a quantized B's padded columns dequantize to x_min, but the
+    # matching W rows are zero).
+    bp = _pad_to(b, block_f, 1)
+    wp = _pad_to(_pad_to(w, block_f, 0), block_f, 1)
+    biasp = _pad_to(bias.reshape(-1), block_f, 0)
+    if bp.shape[1] > _FUSED_LAYER_MAX_DIM or wp.shape[1] > _FUSED_LAYER_MAX_DIM:
+        raise ValueError(
+            f"fused layer dims F={feat}, H={hidden} exceed the VMEM budget "
+            f"({_FUSED_LAYER_MAX_DIM} padded); use the unfused path")
+    kw = {}
+    if quantized_meta is not None:
+        scale, x_min = quantized_meta
+        kw = dict(quantized=True, scale=float(scale), x_min=float(x_min))
+    out = _fused_layer_kernel(val, col, lw, bp, wp, biasp, block_r=block_r,
+                              relu=relu, interpret=interpret, **kw)
+    return out[:rows, :hidden]
 
 
 def aes_sample(csr: CSR, sh_width: int, *, block_r: int = 8,

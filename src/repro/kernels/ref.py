@@ -79,6 +79,30 @@ def quant_block_ell_spmm(bell, qf):
     return block_ell_spmm(bell, x)
 
 
+@functools.partial(jax.jit, static_argnames=("relu",))
+def fused_layer(ell_val, ell_col, b, w, bias, *, relu: bool = True):
+    """Oracle for the fused layer kernel: aggregation, dense transform and
+    activation as separate exact ops.
+
+    ``act(ell_spmm(ell, B) @ W + bias)`` with ``act = relu`` or identity —
+    the ground truth ``kernels.ops.fused_layer_spmm`` must match to float
+    tolerance.
+    """
+    h = ell_spmm_rowloop(ell_val, ell_col, b) @ w + bias
+    return jnp.maximum(h, 0.0) if relu else h
+
+
+def quant_fused_layer(ell_val, ell_col, qf, w, bias, *, relu: bool = True):
+    """Dequantize-then-layer oracle for the quantized fused layer path:
+    materialize Eq. 2 and run the exact fused layer.
+
+    Args:
+      qf: a ``repro.core.quantization.QuantizedFeatures``.
+    """
+    x = dequantize(qf.q, qf.x_min, qf.x_max, qf.bits)
+    return fused_layer(ell_val, ell_col, x, w, bias, relu=relu)
+
+
 @functools.partial(jax.jit, static_argnames=("bits", "sh_width"))
 def aes_spmm(row_ptr, col_ind, val, b, sh_width: int, bits: int | None = None,
              x_min=None, x_max=None):

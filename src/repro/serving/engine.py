@@ -279,8 +279,10 @@ class GNNServer:
 
         self._queue: list = []
         self._closed = False
+        self._features_fp: Optional[str] = None  # lazy content hash
         self.stats = {"requests": 0, "flushes": 0, "sharded_passes": 0,
-                      "rows_served": 0, "edge_updates": 0}
+                      "rows_served": 0, "resident_dedupes": 0,
+                      "edge_updates": 0}
 
     def _prepare_execution(self) -> None:
         """(Re)build the mode-specific execution state from the current
@@ -384,11 +386,37 @@ class GNNServer:
                 f"[num_nodes={self.features.shape[0]}, F]")
         return jnp.asarray(x, jnp.float32)
 
+    def _is_resident_operand(self, x) -> bool:
+        """True when ``x`` is (content-equal to) the server's own feature
+        matrix — the same content-hash guard the plan cache uses
+        (``features_fingerprint``), not object identity, so an
+        equal-but-distinct copy (``jnp.asarray`` round trip, a
+        deserialized request payload) still takes the cached/quantized
+        fast path.  Shape/dtype gate first: a hidden-layer activation has
+        a different column count and never pays the O(N*F) hash."""
+        if x is self.features:
+            return True
+        if tuple(x.shape) != tuple(self.features.shape) \
+                or x.dtype != self.features.dtype:
+            return False
+        from repro.tuning.plan_cache import features_fingerprint
+
+        if self._features_fp is None:
+            self._features_fp = features_fingerprint(self.features)
+        return features_fingerprint(x) == self._features_fp
+
     def submit(self, x=None) -> int:
         """Enqueue a request; returns its ticket (index into the next
         ``flush()`` result list).  Invalid operands and post-``close()``
-        submissions raise ``ValueError`` here, at enqueue time."""
+        submissions raise ``ValueError`` here, at enqueue time.
+
+        A dense operand content-equal to the server's feature matrix is
+        deduped to the ``x=None`` fast path (see
+        :meth:`_is_resident_operand`)."""
         x = self.validate_operand(x)
+        if x is not None and self._is_resident_operand(x):
+            self.stats["resident_dedupes"] += 1
+            x = None
         ticket = len(self._queue)
         self._queue.append(x)
         return ticket
@@ -478,13 +506,17 @@ class GNNServer:
         ``x=None`` requests run ``assume_tuned`` — the init-time
         verification already pinned each resident operand to its plan, so
         no per-request content hashing happens here."""
+        from repro.exec import default_executor
+
+        executor = default_executor()
         plans = self.plans if x is None else self._float_plans
         outs = []
         cur = self._operand(0, x)
         for s in range(self.num_shards):
             nxt = self._operand(s + 1, x) if s + 1 < self.num_shards \
                 else None
-            outs.append(plans[s].run(cur, assume_tuned=x is None))
+            outs.append(executor.run_plan(plans[s], cur,
+                                          assume_tuned=x is None))
             cur = nxt
         return concat_shard_outputs(outs)
 

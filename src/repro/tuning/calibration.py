@@ -428,7 +428,8 @@ def _solve_roofline(flops: np.ndarray, byts: np.ndarray, y: np.ndarray,
 
 
 def fit_machine_model(records: Sequence[dict],
-                      base: MachineModel | None = None) -> MachineModel:
+                      base: MachineModel | None = None,
+                      backend: str | None = None) -> MachineModel:
     """Least-squares the roofline constants from logged records.
 
     Latency records (kinds ``spmm``/``bucket``/``plan``) fit
@@ -437,8 +438,20 @@ def fit_machine_model(records: Sequence[dict],
     per-record implied slope, reusing the fitted overhead).  Terms a
     degenerate log cannot identify keep ``base``'s values, so the result
     is always strictly positive.
+
+    ``backend`` restricts the fit to records whose config ran on that
+    execution backend — interpret-mode Pallas and XLA-compiled rowloops
+    have wildly different effective constants on the same host, so one
+    blended fit misprices whichever backend has fewer records.  When the
+    filtered set is too thin to fit (< 3 latency records) the full set is
+    used instead — a coarse fit beats the napkin constants.
     """
     base = base or MachineModel()
+    if backend is not None:
+        sel = [r for r in records
+               if r.get("config", {}).get("backend") == backend]
+        if sum(1 for r in sel if r.get("kind") in LATENCY_KINDS) >= 3:
+            records = sel
     a, b, c = 1.0 / base.peak_flops, 1.0 / base.hbm_bw, \
         base.launch_overhead_us
 
@@ -500,11 +513,17 @@ _FIT_CACHE: dict[tuple, Optional[MachineModel]] = {}
 def calibrated_machine_model(log: Optional[CalibrationLog] = None,
                              host: Optional[str] = None,
                              min_records: int | None = None,
+                             backend: Optional[str] = None,
                              ) -> Optional[MachineModel]:
     """The host-fitted model, or ``None`` when calibration is off, no log
     is configured, or fewer than ``min_records`` latency records exist.
     Fits are memoized on the log file's (size, mtime), so ranking a
-    thousand blocks refits at most once per appended batch."""
+    thousand blocks refits at most once per appended batch.
+
+    ``backend`` selects the per-(host, backend) constants: when that
+    backend has accumulated ``min_records`` of its own latency records
+    the fit uses only them; below that it falls back to the host's
+    all-backend fit (which must itself clear ``min_records``)."""
     log = log if log is not None else default_log()
     if log is None:
         return None
@@ -515,12 +534,21 @@ def calibrated_machine_model(log: Optional[CalibrationLog] = None,
         st = path.stat()
     except OSError:
         return None
-    key = (str(path), st.st_size, st.st_mtime_ns, min_records)
+    key = (str(path), st.st_size, st.st_mtime_ns, min_records, backend)
     if key in _FIT_CACHE:
         return _FIT_CACHE[key]
     records = log.records(host)
     n_lat = sum(1 for r in records if r.get("kind") in LATENCY_KINDS)
-    model = fit_machine_model(records) if n_lat >= min_records else None
+    if n_lat < min_records:
+        model = None
+    else:
+        fit_backend = backend
+        if backend is not None:
+            n_b = sum(1 for r in records if r.get("kind") in LATENCY_KINDS
+                      and r.get("config", {}).get("backend") == backend)
+            if n_b < min_records:
+                fit_backend = None    # thin backend slice: host-wide fit
+        model = fit_machine_model(records, backend=fit_backend)
     if len(_FIT_CACHE) > 64:
         _FIT_CACHE.clear()
     _FIT_CACHE[key] = model

@@ -210,12 +210,27 @@ def rank(feats: GraphFeatures, candidates: Iterable[CandidateConfig],
          accuracy_weight: float = 5.0) -> list[CostEstimate]:
     """All candidates, best (lowest score) first.
 
-    With ``machine=None`` the host-calibrated model is used when enough
-    (predicted, measured) pairs have been logged for this host
-    (``repro.tuning.calibration``); otherwise the generic defaults."""
+    With ``machine=None`` each candidate is priced by its *backend's*
+    host-calibrated model when enough (predicted, measured) pairs have
+    been logged (``repro.tuning.calibration``, per-(host, backend)
+    constants — interpret-mode Pallas and XLA rowloops do not share a
+    roofline), falling back to the host-wide fit for thin backend
+    slices and to the generic defaults with no log at all.  Honest
+    cross-backend pricing is what lets the model rank a fused pallas
+    layer against an unfused jax pipeline."""
     if machine is None:
         from repro.tuning.calibration import calibrated_machine_model
 
-        machine = calibrated_machine_model()
-    ests = [predict(feats, c, machine, accuracy_weight) for c in candidates]
+        models: dict = {}
+
+        def model_for(backend: str) -> MachineModel | None:
+            if backend not in models:
+                models[backend] = calibrated_machine_model(backend=backend)
+            return models[backend]
+
+        ests = [predict(feats, c, model_for(c.backend), accuracy_weight)
+                for c in candidates]
+    else:
+        ests = [predict(feats, c, machine, accuracy_weight)
+                for c in candidates]
     return sorted(ests, key=lambda e: e.score)

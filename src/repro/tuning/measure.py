@@ -71,19 +71,15 @@ def prepare_operand(csr: CSR, cfg: CandidateConfig,
 
 def run_operand(ell: ELL, features, cfg: CandidateConfig,
                 q: QuantizedFeatures | None = None):
-    """The per-request work: SpMM over a prepared (cached) operand."""
-    from repro.kernels import ref
+    """The per-request work: SpMM over a prepared (cached) operand.
 
-    if isinstance(features, QuantizedFeatures):
-        features = dequantize(features)   # float paths want the dense form
-    if cfg.backend == "pallas":
-        from repro.kernels import ops
+    Dispatch lives in :class:`repro.exec.PlanExecutor`; this is a thin
+    delegate kept for the tuner's (operand, config) call shape.
+    """
+    from repro.exec import default_executor
 
-        if q is not None:
-            return ops.ell_spmm(ell, q.q, quantized_meta=(q.scale, q.x_min))
-        return ops.ell_spmm(ell, features)
-    x = dequantize(q) if q is not None else features
-    return ref.ell_spmm_rowloop(ell.val, ell.col, x)
+    return default_executor().run_ell(ell, features, backend=cfg.backend,
+                                      quantized=q)
 
 
 def measure_blocked_buckets(bell, b, buckets, *, quantized_meta=None,

@@ -151,13 +151,13 @@ class TunedPlan:
         was tuned with, verified by content hash — any other dense operand
         (a hidden-layer activation, an updated feature table) falls back to
         the raw float path rather than silently aggregating stale data.
-        """
-        from repro.tuning.measure import run_operand
 
-        q = self.quantized
-        if q is not None and features_fingerprint(features) != self.features_fp:
-            q = None
-        return run_operand(self.ell, features, self.config, q)
+        Dispatch (including the hash guard) lives in
+        :class:`repro.exec.PlanExecutor`; this is a thin delegate.
+        """
+        from repro.exec import default_executor
+
+        return default_executor().run_plan(self, features)
 
 
 @dataclass
@@ -222,32 +222,14 @@ class BlockedPlan:
         the match once at startup (``repro.serving``) use it to keep the
         request hot path free of host-side hashing; a quantized plan may
         then be run with ``features=None`` (the cached operand serves).
+
+        Dispatch (guards, bucketed launches, backend matrix) lives in
+        :class:`repro.exec.PlanExecutor`; this is a thin delegate.
         """
-        from repro.core.quantization import dequantize
+        from repro.exec import default_executor
 
-        if isinstance(features, QuantizedFeatures):
-            features = np.asarray(dequantize(features))
-        q = self.quantized
-        if q is not None and not assume_tuned \
-                and features_fingerprint(features) != self.features_fp:
-            q = None
-        if q is None and features is None:
-            raise ValueError("features=None requires a quantized plan and "
-                             "assume_tuned=True")
-        if self.backend == "pallas":
-            from repro.kernels import ops
-
-            buckets = self.buckets or None
-            if q is not None:
-                return ops.block_ell_spmm(
-                    self.bell, q.q, quantized_meta=(q.scale, q.x_min),
-                    buckets=buckets)
-            return ops.block_ell_spmm(self.bell, features, buckets=buckets)
-        from repro.kernels import ref
-
-        if q is not None:
-            return ref.quant_block_ell_spmm(self.bell, q)
-        return ref.block_ell_spmm(self.bell, features)
+        return default_executor().run_plan(self, features,
+                                           assume_tuned=assume_tuned)
 
 
 AnyPlan = Union[TunedPlan, BlockedPlan]

@@ -3,8 +3,10 @@
 One parametrized grid runs **every execution path** — global ELL on the
 jax and Pallas backends, the fused AES kernel, BlockELL with width-bucketed
 launches, the fused-dequant quantized paths, the sharded serving engine
-(loop and spmd), the async continuous-batching ``ServingRuntime``, and
-the tuned ``strategy="auto"`` entry points — against
+(loop and spmd), the async continuous-batching ``ServingRuntime``,
+the tuned ``strategy="auto"`` entry points, the unified
+``repro.exec.PlanExecutor`` dispatch (global / blocked / plan), and the
+fused Pallas layer kernel — against
 the ``kernels/ref.py`` oracles (and, where coverage is exact, the dense
 ground truth) on a shared set of adversarial graphs: an empty graph, a
 graph with empty rows, a single dense row amid a sparse tail, and a ragged
@@ -427,6 +429,134 @@ def _path_serve_matches_block_plan(name):
     _close(server.aggregate(), want)
 
 
+def _path_executor_global(name):
+    """``PlanExecutor.run_ell`` serves each (backend, quantized) cell
+    through the same kernel the pre-executor call sites used —
+    bit-identical, so rerouting ``run_operand`` / ``aes_spmm`` / the
+    serving loop through the executor is behavior-preserving by
+    construction.  Also pins the range guard: re-encoding the matrix the
+    quantized operand came from is exact, a drifted operand falls back
+    to the float kernel bit-for-bit."""
+    from repro.exec import default_executor
+
+    g, x, want = _case(name)
+    ex = default_executor()
+    for w in (4, _wmax(g) + 3):
+        ell = sample(g, w, "aes")
+        np.testing.assert_array_equal(
+            np.asarray(ex.run_ell(ell, x, backend="jax")),
+            np.asarray(ref.ell_spmm_rowloop(ell.val, ell.col, x)),
+            err_msg=f"jax-w{w}")
+        np.testing.assert_array_equal(
+            np.asarray(ex.run_ell(ell, x, backend="pallas")),
+            np.asarray(ops.ell_spmm(ell, x)), err_msg=f"pallas-w{w}")
+        if w > _wmax(g):
+            _close(ex.run_ell(ell, x, backend="pallas"), want,
+                   rtol=1e-4, atol=1e-4, label=f"covering-w{w}-vs-dense")
+    qf = quantize(np.asarray(x), 8)
+    ell = sample(g, 4, "aes")
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_ell(ell, x, backend="pallas", quantized=qf)),
+        np.asarray(ops.ell_spmm(ell, qf.q,
+                                quantized_meta=(qf.scale, qf.x_min))),
+        err_msg="pallas-quant")
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_ell(ell, x, backend="jax", quantized=qf)),
+        np.asarray(ref.ell_spmm_rowloop(ell.val, ell.col, dequantize(qf))),
+        err_msg="jax-quant")
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_ell(ell, x, backend="pallas", quantized=qf,
+                              requant_guard=True)),
+        np.asarray(ex.run_ell(ell, x, backend="pallas", quantized=qf)),
+        err_msg="requant-guard-exact-for-encoded-matrix")
+    drifted = np.asarray(x) * 10.0
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_ell(ell, drifted, backend="pallas", quantized=qf,
+                              requant_guard=True)),
+        np.asarray(ex.run_ell(ell, drifted, backend="pallas")),
+        err_msg="requant-guard-drift-float-fallback")
+
+
+def _path_executor_blocked(name):
+    """``PlanExecutor.run_block`` / ``run_plan`` vs the unmodified
+    BlockELL oracles and kernels on a truncating mixed-strategy plan,
+    every bucket partition, float and quantized — plus the tuned-plan
+    entry (``plan.run`` now delegates here)."""
+    from repro.exec import default_executor
+    from repro.tuning.autotune import tune_blocked
+
+    g, x, want = _case(name)
+    ex = default_executor()
+    n = max(-(-g.num_rows // 8), 1)
+    bell = sample_csr_to_block_ell(g, _mixed_configs(n), 8)
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_block(bell, x, backend="jax")),
+        np.asarray(ref.block_ell_spmm(bell, x)), err_msg="jax")
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_block(bell, x, backend="pallas")),
+        np.asarray(ops.block_ell_spmm(bell, x)), err_msg="pallas")
+    for k in (1, 2):
+        buckets = partition_width_buckets(bell.widths, k)
+        np.testing.assert_array_equal(
+            np.asarray(ex.run_block(bell, x, backend="pallas",
+                                    buckets=buckets)),
+            np.asarray(ops.block_ell_spmm(bell, x, buckets=buckets)),
+            err_msg=f"buckets-{k}")
+    qf = quantize(np.asarray(x), 8)
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_block(bell, None, backend="jax", quantized=qf)),
+        np.asarray(ref.quant_block_ell_spmm(bell, qf)), err_msg="jax-quant")
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_block(bell, None, backend="pallas", quantized=qf)),
+        np.asarray(ops.block_ell_spmm(
+            bell, qf.q, quantized_meta=(qf.scale, qf.x_min))),
+        err_msg="pallas-quant")
+    tk = _exact_tune_kwargs(g, block_rows=16, measure_buckets=False)
+    plan = tune_blocked(g, x, cache=None, **tk)
+    _close(ex.run_plan(plan, x), want, rtol=1e-4, atol=1e-4,
+           label="run-plan-vs-dense")
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_plan(plan, x)), np.asarray(plan.run(x)),
+        err_msg="run-plan-vs-plan.run")
+
+
+def _path_fused_layer(name):
+    """The fused Pallas layer kernel (gather + dequant + SpMM + dense
+    transform + activation in one launch) vs the separate-exact-ops
+    oracle, both activation modes, truncating and covering widths, float
+    and int8 — and the executor dispatch on top of it."""
+    g, x, _ = _case(name)
+    rng = np.random.default_rng(zlib.crc32(name.encode()) + 1)
+    hidden = 5
+    w = jnp.asarray(rng.normal(size=(FEAT, hidden)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(hidden,)).astype(np.float32))
+    for width in (4, _wmax(g) + 3):
+        ell = sample(g, width, "aes")
+        for relu in (True, False):
+            _close(ops.fused_layer_spmm(ell, x, w, bias, relu=relu),
+                   ref.fused_layer(ell.val, ell.col, x, w, bias, relu=relu),
+                   rtol=1e-4, atol=1e-4, label=f"w{width}-relu{relu}")
+    qf = quantize(np.asarray(x), 8)
+    ell = sample(g, 4, "aes")
+    _close(ops.fused_layer_spmm(ell, qf.q, w, bias, relu=True,
+                                quantized_meta=(qf.scale, qf.x_min)),
+           ref.quant_fused_layer(ell.val, ell.col, qf, w, bias, relu=True),
+           rtol=1e-4, atol=1e-4, label="quant-vs-dequant-then-layer")
+    from repro.exec import default_executor
+
+    ex = default_executor()
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_fused_layer(ell, x, w, bias, relu=True)),
+        np.asarray(ops.fused_layer_spmm(ell, x, w, bias, relu=True)),
+        err_msg="executor-pallas")
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_fused_layer(ell, x, w, bias, relu=True,
+                                      backend="jax")),
+        np.asarray(ref.fused_layer(ell.val, ell.col, x, w, bias,
+                                   relu=True)),
+        err_msg="executor-jax")
+
+
 _PATHS = {
     "ell-jax-sampled": _path_ell_sampled_oracles,
     "ell-full": _path_ell_full,
@@ -445,6 +575,9 @@ _PATHS = {
     "serve-runtime": _path_serve_runtime,
     "serve-spmd": _path_serve_spmd,
     "serve-vs-block": _path_serve_matches_block_plan,
+    "executor-global": _path_executor_global,
+    "executor-blocked": _path_executor_blocked,
+    "fused-layer": _path_fused_layer,
 }
 
 

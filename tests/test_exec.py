@@ -1,0 +1,209 @@
+"""Executor-layer regression tests (ISSUE 8 satellites).
+
+Pins the three serving-path bugs this PR fixed and the new fused-layer
+evaluate surface:
+
+  * the sharded ``gnn.evaluate(shards=N)`` path closes its ``GNNServer``
+    on every exit — including mid-forward exceptions (it used to leak
+    the server, whose per-shard device-committed operands kept an
+    arbitrarily large slice of HBM alive);
+  * ``GNNServer.submit`` dedupes operands *content-equal* to the
+    server's feature matrix onto the cached (possibly quantized) fast
+    path — the old check was object identity, so a deserialized or
+    copied request payload silently paid the slow float path;
+  * ``quantization.requantize_within_range``: the range guard that lets
+    hidden-layer activations ride a quantized operand without the old
+    silent-clipping bug — exact for the encoded matrix, re-encoded for
+    in-range operands, ``None`` (float fallback) on drift;
+  * ``evaluate(..., fuse_layers=True)`` matches the unfused pipeline's
+    accuracy, float and int8, manual and auto-tuned.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.quantization import (dequantize, quantize,
+                                     requantize_within_range)
+from repro.gnn import evaluate, make_dataset, train_model
+from repro.serving import GNNServer
+from repro.tuning import PlanCache
+
+from conftest import random_csr
+
+# fast exact-ish tuning knobs: tiny grid, no measurement loops
+TK = dict(widths=(8, 16), include_full=True, measure_plan=False,
+          warmup=0, iters=1)
+
+
+@pytest.fixture(scope="module")
+def cora():
+    ds = make_dataset("cora", scale=0.1, seed=2)
+    params, ideal = train_model(ds, "gcn", hidden=16, epochs=60, seed=2)
+    return ds, params, ideal
+
+
+# ---------------------------------------------------------------------------
+# satellite: sharded evaluate must not leak its GNNServer
+# ---------------------------------------------------------------------------
+
+class _SpyServer(GNNServer):
+    """Records every instance so tests can assert post-conditions on
+    servers ``evaluate`` creates internally."""
+
+    instances: list = []
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        _SpyServer.instances.append(self)
+
+
+def test_sharded_evaluate_closes_server(cora, monkeypatch):
+    import repro.serving as serving
+
+    ds, params, _ = cora
+    _SpyServer.instances = []
+    monkeypatch.setattr(serving, "GNNServer", _SpyServer)
+    evaluate(ds, "gcn", params, strategy="auto", shards=2,
+             plan_cache=PlanCache(), tune_kwargs=TK)
+    assert len(_SpyServer.instances) == 1
+    assert all(s._closed for s in _SpyServer.instances)
+
+
+def test_sharded_evaluate_closes_server_on_error(cora, monkeypatch):
+    """The leak regression proper: a mid-forward failure used to abandon
+    the server with its device-committed shard operands still alive."""
+    import repro.serving as serving
+
+    ds, params, _ = cora
+
+    class _Boom(_SpyServer):
+        def aggregate(self, x=None):
+            raise RuntimeError("injected aggregation failure")
+
+    _SpyServer.instances = []
+    monkeypatch.setattr(serving, "GNNServer", _Boom)
+    with pytest.raises(RuntimeError, match="injected aggregation"):
+        evaluate(ds, "gcn", params, strategy="auto", shards=2,
+                 plan_cache=PlanCache(), tune_kwargs=TK)
+    assert len(_SpyServer.instances) == 1
+    assert all(s._closed for s in _SpyServer.instances)
+
+
+# ---------------------------------------------------------------------------
+# satellite: content-hash resident-operand dedupe in GNNServer.submit
+# ---------------------------------------------------------------------------
+
+def test_submit_dedupes_content_equal_operand():
+    rng = np.random.default_rng(5)
+    g = random_csr(rng, 48, 5.0)
+    x = jnp.asarray(rng.normal(size=(48, 6)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=2, cache=PlanCache(), tune_kwargs=TK)
+    try:
+        want = np.asarray(server.aggregate())          # x=None fast path
+        copy = jnp.asarray(np.array(x, copy=True))     # equal, not identical
+        assert copy is not x
+        got = np.asarray(server.aggregate(copy))
+        assert server.stats["resident_dedupes"] == 1
+        np.testing.assert_array_equal(got, want)
+        # a hidden-layer-shaped operand never matches (and never hashes:
+        # the shape gate runs first)
+        server.aggregate(jnp.asarray(
+            rng.normal(size=(48, 4)).astype(np.float32)))
+        assert server.stats["resident_dedupes"] == 1
+    finally:
+        server.close()
+
+
+def test_quantized_submit_dedupe_serves_uint8_operand():
+    """With quantized per-shard plans, a content-equal copy must ride the
+    cached uint8 operand bit-for-bit (x=None path), not a fresh float
+    gather of the copy."""
+    rng = np.random.default_rng(7)
+    g = random_csr(rng, 40, 4.0)
+    x = jnp.asarray(rng.normal(size=(40, 5)).astype(np.float32))
+    server = GNNServer(g, x, num_shards=2, quant=8, cache=PlanCache(),
+                       tune_kwargs=TK)
+    try:
+        want = np.asarray(server.aggregate())
+        got = np.asarray(server.aggregate(jnp.asarray(np.array(x))))
+        assert server.stats["resident_dedupes"] == 1
+        np.testing.assert_array_equal(got, want)
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: the quantized range guard
+# ---------------------------------------------------------------------------
+
+def test_requantize_within_range():
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(20, 6)).astype(np.float32)
+    qf = quantize(x, 8)
+
+    # the matrix the operand encodes round-trips bit-exactly
+    rq = requantize_within_range(qf, dequantize(qf))
+    assert rq is not None
+    np.testing.assert_array_equal(np.asarray(rq.q), np.asarray(qf.q))
+    assert float(rq.x_min) == float(qf.x_min)
+    assert rq.bits == qf.bits
+
+    # an in-range different matrix re-encodes against the stored range,
+    # within the usual scale/2 reconstruction bound
+    y = np.clip(x * 0.5, float(qf.x_min), float(qf.x_max)
+                ).astype(np.float32)
+    rq2 = requantize_within_range(qf, y)
+    assert rq2 is not None
+    recon = np.asarray(dequantize(rq2))
+    assert np.abs(recon - y).max() <= float(qf.scale) / 2 + 1e-6
+
+    # drifted operand: re-encoding would clip -> float-fallback signal
+    assert requantize_within_range(qf, x * 10.0) is None
+
+
+# ---------------------------------------------------------------------------
+# fused-layer evaluate surface
+# ---------------------------------------------------------------------------
+
+def test_fuse_layers_matches_unfused(cora):
+    ds, params, _ = cora
+    base = evaluate(ds, "gcn", params, sh_width=16, strategy="aes",
+                    backend="pallas")
+    fused = evaluate(ds, "gcn", params, sh_width=16, strategy="aes",
+                     backend="pallas", fuse_layers=True)
+    assert abs(base - fused) <= 0.02
+
+
+def test_fuse_layers_quantized_matches_unfused(cora):
+    ds, params, _ = cora
+    base = evaluate(ds, "gcn", params, sh_width=16, strategy="aes",
+                    backend="pallas", quantize_bits=8)
+    fused = evaluate(ds, "gcn", params, sh_width=16, strategy="aes",
+                     backend="pallas", quantize_bits=8, fuse_layers=True)
+    assert abs(base - fused) <= 0.03
+
+
+def test_fuse_layers_auto(cora):
+    ds, params, _ = cora
+    cache = PlanCache()
+    fused = evaluate(ds, "gcn", params, strategy="auto", fuse_layers=True,
+                     plan_cache=cache,
+                     tune_kwargs=dict(widths=(32, 64), budget=2,
+                                      warmup=0, iters=1))
+    exact = evaluate(ds, "gcn", params, strategy="full")
+    assert abs(fused - exact) <= 0.05
+    assert len(cache.plans()) == 1
+
+
+def test_fuse_layers_rejects_invalid_combinations(cora):
+    ds, params, _ = cora
+    with pytest.raises(ValueError, match="single-device"):
+        evaluate(ds, "gcn", params, strategy="auto", shards=2,
+                 fuse_layers=True)
+    with pytest.raises(ValueError, match="GCN"):
+        evaluate(ds, "graphsage", params, fuse_layers=True)
+    with pytest.raises(ValueError, match="granularity"):
+        evaluate(ds, "gcn", params, strategy="auto", granularity="block",
+                 fuse_layers=True)
