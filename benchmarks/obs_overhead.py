@@ -1,0 +1,178 @@
+"""Observability overhead guard: tracing must be ~free when off, cheap
+when on.
+
+Workload: the fused 2-layer GCN forward (``PlanExecutor.run_fused_layer``
+twice over one sampled ELL) — the hottest instrumented path, where every
+call crosses the ``obs.trace`` + counter guards.
+
+Two gates, written to ``BENCH_obs.json``:
+
+  * **disabled < 1%** — with ``REPRO_OBS=0`` the residual cost is the
+    guard branches themselves.  A wall-clock A/B at that scale is pure
+    noise, so the gate is computed from a direct microbenchmark of the
+    disabled-mode primitives (``obs.trace`` returning the no-op
+    singleton, ``obs.count`` early-out) times the number of
+    instrumentation hits one forward actually makes (counted from the
+    enabled-mode ring), divided by the measured forward time.
+  * **enabled < 5%** — median wall clock of the forward with collection
+    on (in-memory ring, no sink) vs off, interleaved rounds so drift
+    hits both arms equally; negative deltas clamp to 0 (noise).
+
+Rows: ``obs_overhead/{off_us,on_us,noop_ns,...}``; ``--smoke`` runs a
+smaller config with the same asserts for CI.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+
+SUMMARY_PATH = Path("BENCH_obs.json")
+
+
+def _forward_fn(num_nodes: int, feat: int, hidden: int, classes: int,
+                sh_width: int, seed: int = 0):
+    import jax.numpy as jnp
+
+    from benchmarks.fused_layer import powerlaw_csr
+    from repro.core.aes_spmm import sample
+    from repro.exec import default_executor
+
+    rng = np.random.default_rng(seed)
+    csr = powerlaw_csr(num_nodes, 8.0, seed=seed)
+    x = jnp.asarray(rng.normal(size=(num_nodes, feat)).astype(np.float32))
+    w1 = jnp.asarray(
+        rng.normal(size=(feat, hidden)).astype(np.float32) / np.sqrt(feat))
+    b1 = jnp.asarray(rng.normal(size=(hidden,)).astype(np.float32))
+    w2 = jnp.asarray(
+        rng.normal(size=(hidden, classes)).astype(np.float32)
+        / np.sqrt(hidden))
+    b2 = jnp.asarray(rng.normal(size=(classes,)).astype(np.float32))
+
+    executor = default_executor()
+    ell = sample(csr, sh_width, "aes")
+
+    def forward():
+        h = executor.run_fused_layer(ell, x, w1, b1, relu=True)
+        return executor.run_fused_layer(ell, h, w2, b2, relu=False)
+
+    return forward
+
+
+def _median_us_interleaved(fn, enabled_states, rounds: int) -> dict:
+    """Time ``fn`` under each obs-enabled state, alternating states each
+    round so clock drift / thermal effects land on both arms equally."""
+    import jax
+
+    from repro import obs
+
+    samples: dict = {state: [] for state in enabled_states}
+    for state in enabled_states:       # one warmup each (compile, caches)
+        obs.set_enabled(state)
+        jax.block_until_ready(fn())
+    for _ in range(rounds):
+        for state in enabled_states:
+            obs.set_enabled(state)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[state].append((time.perf_counter() - t0) * 1e6)
+    obs.set_enabled(True)
+    return {state: float(np.median(v)) for state, v in samples.items()}
+
+
+def _noop_cost_ns(calls: int = 200_000) -> float:
+    """Per-call cost of the disabled-mode primitives: one no-op span
+    enter/exit + one guarded counter increment."""
+    from repro import obs
+
+    obs.set_enabled(False)
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        with obs.trace("noop"):
+            pass
+        obs.count("noop")
+    per_call = (time.perf_counter() - t0) / calls * 1e9
+    obs.set_enabled(True)
+    return per_call
+
+
+def bench(num_nodes: int, feat: int, hidden: int, classes: int,
+          sh_width: int, *, rounds: int = 12, seed: int = 0) -> dict:
+    from repro import obs
+
+    forward = _forward_fn(num_nodes, feat, hidden, classes, sh_width,
+                          seed=seed)
+
+    # instrumentation hits per forward, from the enabled-mode ring
+    obs.set_enabled(True)
+    before = obs.default_tracer().recorded
+    import jax
+    jax.block_until_ready(forward())
+    spans_per_call = obs.default_tracer().recorded - before
+
+    med = _median_us_interleaved(forward, (False, True), rounds)
+    off_us, on_us = med[False], med[True]
+    noop_ns = _noop_cost_ns()
+
+    # disabled gate: estimated guard cost per forward vs its wall clock
+    disabled_pct = (noop_ns * spans_per_call) / 1e3 / max(off_us, 1e-9) * 100
+    enabled_pct = max(0.0, (on_us - off_us) / max(off_us, 1e-9) * 100)
+
+    tag = f"{num_nodes}n-f{feat}"
+    emit(f"obs_overhead/{tag}/off", off_us, f"spans_per_call={spans_per_call}")
+    emit(f"obs_overhead/{tag}/on", on_us, f"noop_ns={noop_ns:.0f}")
+    emit(f"obs_overhead/{tag}/overhead", 0.0,
+         f"disabled_pct={disabled_pct:.3f},enabled_pct={enabled_pct:.2f}")
+    return {
+        "nodes": num_nodes, "feat": feat, "hidden": hidden,
+        "sh_width": sh_width, "rounds": rounds,
+        "off_us": round(off_us, 1), "on_us": round(on_us, 1),
+        "noop_ns_per_call": round(noop_ns, 1),
+        "spans_per_call": spans_per_call,
+        "disabled_overhead_pct": round(disabled_pct, 4),
+        "enabled_overhead_pct": round(enabled_pct, 3),
+    }
+
+
+def _gate(res: dict) -> dict:
+    return {
+        "result": res,
+        "gate_disabled_pct": res["disabled_overhead_pct"],
+        "gate_enabled_pct": res["enabled_overhead_pct"],
+        "gate_pass": bool(res["disabled_overhead_pct"] < 1.0
+                          and res["enabled_overhead_pct"] < 5.0),
+    }
+
+
+def run() -> dict:
+    res = bench(2048, 256, 64, 16, 16, rounds=12)
+    summary = _gate(res)
+    SUMMARY_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+    emit("obs_overhead/gate", 0.0,
+         f"disabled_pct={summary['gate_disabled_pct']},"
+         f"enabled_pct={summary['gate_enabled_pct']},"
+         f"pass={summary['gate_pass']},json={SUMMARY_PATH}")
+    assert summary["gate_pass"], summary
+    return summary
+
+
+def smoke() -> None:
+    """CI smoke: same asserts on a smaller graph / fewer rounds."""
+    res = bench(1024, 256, 32, 8, 8, rounds=8, seed=3)
+    summary = _gate(res)
+    SUMMARY_PATH.write_text(json.dumps(summary, indent=2) + "\n")
+    assert summary["gate_pass"], summary
+    print(f"obs_overhead smoke OK: {json.dumps(summary)}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        run()

@@ -10,8 +10,8 @@ def main() -> None:
     from benchmarks import (accuracy_vs_w, autotune_gain, block_tuning_gain,
                             calibration_gain, fused_layer, incremental_update,
                             kernel_blocks, kernel_speedup, motivation,
-                            quant_block_gain, quant_loading, sampling_cdf,
-                            serving_throughput)
+                            obs_overhead, quant_block_gain, quant_loading,
+                            sampling_cdf, serving_throughput)
 
     print("name,us_per_call,derived")
     sampling_cdf.run()
@@ -33,6 +33,9 @@ def main() -> None:
     # fused layer kernel vs unfused 2-layer GCN
     # (-> BENCH_fused.json, gate: parity + speedup>1 + bytes win)
     fused_layer.run()
+    # tracing/metrics cost on the fused path
+    # (-> BENCH_obs.json, gate: disabled <1%, enabled <5%)
+    obs_overhead.run()
     try:
         from benchmarks import roofline
         roofline.report()

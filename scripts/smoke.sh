@@ -22,6 +22,9 @@ echo "== serving: sharded engine --smoke (4 host devices) =="
 XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     python -m repro.serving.server --smoke --json
 
+echo "== observability: traced end-to-end --smoke =="
+python -m repro.obs --smoke --json
+
 echo "== benchmarks: 2-config autotune_gain slice =="
 python - <<'EOF'
 from benchmarks import autotune_gain

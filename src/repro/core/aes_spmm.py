@@ -33,7 +33,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import obs
 from repro.core.graph import CSR, ELL, pad_csr_to_ell
 from repro.core.quantization import QuantizedFeatures, dequantize
 from repro.core.sampling import STRATEGIES
@@ -43,14 +45,28 @@ def sample(csr: CSR, sh_width: int, strategy: str = "aes",
            backend: str = "jax") -> ELL:
     """Sampling pre-pass producing the ELL operand."""
     if strategy == "full":
-        return pad_csr_to_ell(csr)
-    if backend == "pallas" and strategy == "aes":
+        ell = pad_csr_to_ell(csr)
+    elif backend == "pallas" and strategy == "aes":
         from repro.kernels import ops
 
-        return ops.aes_sample(csr, sh_width)
-    fn = STRATEGIES[strategy]
-    val, col = fn(csr.row_ptr, csr.col_ind, csr.val, sh_width)
-    return ELL(val, col, csr.num_cols)
+        ell = ops.aes_sample(csr, sh_width)
+    else:
+        fn = STRATEGIES[strategy]
+        val, col = fn(csr.row_ptr, csr.col_ind, csr.val, sh_width)
+        ell = ELL(val, col, csr.num_cols)
+    if obs.enabled():
+        # the paper's accuracy-vs-speed dial, as counters: how many edges
+        # the sampler kept vs. discarded on this call (one host pull of
+        # the per-row live widths; dropped is clamped at 0 because AES
+        # may duplicate hub edges)
+        from repro.core.graph import ell_live_widths
+
+        kept = int(np.asarray(ell_live_widths(ell.val, ell.col)).sum())
+        obs.count("sampler.calls")
+        obs.count(f"sampler.calls.{strategy}")
+        obs.count("sampler.edges_kept", kept)
+        obs.count("sampler.edges_dropped", max(int(csr.nnz) - kept, 0))
+    return ell
 
 
 def aes_spmm(csr: CSR, features, sh_width: int = 128, *,

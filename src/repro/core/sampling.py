@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 PRIME_NUM = 1429  # paper §3.3: "prime_num is set to 1429"
 
 # Strategy table thresholds on R = row_nnz / W (paper Table 1).  Expressed as
@@ -288,11 +290,21 @@ def sample_csr_to_block_ell(csr, configs, block_rows: int):
     max_w = max(widths)
     vals.append(jnp.zeros(max_w, csr.val.dtype))
     cols.append(jnp.zeros(max_w, jnp.int32))
-    return BlockELL(
+    bell = BlockELL(
         val=jnp.concatenate(vals), col=jnp.concatenate(cols),
         live_w=jnp.concatenate(lives), widths=tuple(widths),
         strategies=tuple(strategies), block_rows=block_rows,
         num_rows=num_rows, num_cols=csr.num_cols)
+    if obs.enabled():
+        # blocked-path twin of the sample() quality counters: edges the
+        # stitched mixed-width operand kept vs. discarded, plus the slot
+        # count the per-block widths allocated (tightness vs. nnz)
+        kept = int(bell.live_edges())
+        obs.count("sampler.block_calls")
+        obs.count("sampler.edges_kept", kept)
+        obs.count("sampler.edges_dropped", max(int(csr.nnz) - kept, 0))
+        obs.count("sampler.block_slots", int(bell.col.size) - max_w)
+    return bell
 
 
 def sampling_rate(row_ptr, sh_width: int) -> float:

@@ -47,8 +47,25 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro import obs
 from repro.core.quantization import (QuantizedFeatures, dequantize,
                                      requantize_within_range)
+
+
+def _dtype_tag(quantized: Optional[QuantizedFeatures]) -> str:
+    return "float" if quantized is None else f"int{quantized.bits}"
+
+
+def _guarded_requant(quantized, features, site: str):
+    """Range-guard re-encode + the drift-fallback quality counter: how
+    often a hidden-layer activation could ride the stored quantization
+    range vs. fell back to the float path."""
+    requanted = requantize_within_range(quantized, features)
+    if obs.enabled():
+        obs.count("quant.requant_in_range" if requanted is not None
+                  else "quant.requant_drift_fallback")
+        obs.count(f"quant.requant_{site}")
+    return requanted
 
 
 class PlanExecutor:
@@ -90,16 +107,21 @@ class PlanExecutor:
         if isinstance(features, QuantizedFeatures):
             features = dequantize(features)
         if quantized is not None and requant_guard:
-            quantized = requantize_within_range(quantized, features)
-        if backend == "pallas":
-            if quantized is not None:
-                return ops.ell_spmm(
-                    ell, quantized.q,
-                    quantized_meta=(quantized.scale, quantized.x_min),
-                    interpret=self.interpret)
-            return ops.ell_spmm(ell, features, interpret=self.interpret)
-        x = dequantize(quantized) if quantized is not None else features
-        return ref.ell_spmm_rowloop(ell.val, ell.col, x)
+            quantized = _guarded_requant(quantized, features, "run_ell")
+        with obs.trace("exec.run_ell", backend=backend,
+                       dtype=_dtype_tag(quantized)):
+            if obs.enabled():
+                obs.count(
+                    f"executor.run_ell.{backend}.{_dtype_tag(quantized)}")
+            if backend == "pallas":
+                if quantized is not None:
+                    return ops.ell_spmm(
+                        ell, quantized.q,
+                        quantized_meta=(quantized.scale, quantized.x_min),
+                        interpret=self.interpret)
+                return ops.ell_spmm(ell, features, interpret=self.interpret)
+            x = dequantize(quantized) if quantized is not None else features
+            return ref.ell_spmm_rowloop(ell.val, ell.col, x)
 
     # ------------------------------------------------------------------
     # BlockELL
@@ -119,21 +141,27 @@ class PlanExecutor:
           buckets: tuned width-bucket partition; ``None``/empty lets the
             kernel wrapper compute one.
         """
-        if backend == "pallas":
-            from repro.kernels import ops
+        with obs.trace("exec.run_block", backend=backend,
+                       dtype=_dtype_tag(quantized)):
+            if obs.enabled():
+                obs.count(
+                    f"executor.run_block.{backend}.{_dtype_tag(quantized)}")
+            if backend == "pallas":
+                from repro.kernels import ops
+
+                if quantized is not None:
+                    return ops.block_ell_spmm(
+                        bell, quantized.q,
+                        quantized_meta=(quantized.scale, quantized.x_min),
+                        buckets=buckets or None, interpret=self.interpret)
+                return ops.block_ell_spmm(bell, features,
+                                          buckets=buckets or None,
+                                          interpret=self.interpret)
+            from repro.kernels import ref
 
             if quantized is not None:
-                return ops.block_ell_spmm(
-                    bell, quantized.q,
-                    quantized_meta=(quantized.scale, quantized.x_min),
-                    buckets=buckets or None, interpret=self.interpret)
-            return ops.block_ell_spmm(bell, features, buckets=buckets or None,
-                                      interpret=self.interpret)
-        from repro.kernels import ref
-
-        if quantized is not None:
-            return ref.quant_block_ell_spmm(bell, quantized)
-        return ref.block_ell_spmm(bell, features)
+                return ref.quant_block_ell_spmm(bell, quantized)
+            return ref.block_ell_spmm(bell, features)
 
     # ------------------------------------------------------------------
     # plans
@@ -159,17 +187,27 @@ class PlanExecutor:
             if q is not None and not assume_tuned \
                     and features_fingerprint(features) != plan.features_fp:
                 q = None
+                obs.count("executor.plan_hash_guard_miss")
             if q is None and features is None:
                 raise ValueError("features=None requires a quantized plan "
                                  "and assume_tuned=True")
-            return self.run_block(plan.bell, features, backend=plan.backend,
-                                  quantized=q, buckets=plan.buckets)
+            with obs.trace("exec.run_plan", kind="block",
+                           backend=plan.backend, dtype=_dtype_tag(q)):
+                obs.count("executor.run_plan.block")
+                return self.run_block(plan.bell, features,
+                                      backend=plan.backend,
+                                      quantized=q, buckets=plan.buckets)
         q = plan.quantized
         if q is not None and not assume_tuned \
                 and features_fingerprint(features) != plan.features_fp:
             q = None
-        return self.run_ell(plan.ell, features, backend=plan.config.backend,
-                            quantized=q)
+            obs.count("executor.plan_hash_guard_miss")
+        with obs.trace("exec.run_plan", kind="global",
+                       strategy=plan.config.strategy,
+                       backend=plan.config.backend, dtype=_dtype_tag(q)):
+            obs.count(f"executor.run_plan.global.{plan.config.strategy}")
+            return self.run_ell(plan.ell, features,
+                                backend=plan.config.backend, quantized=q)
 
     # ------------------------------------------------------------------
     # fused layer
@@ -194,17 +232,24 @@ class PlanExecutor:
         if isinstance(features, QuantizedFeatures):
             features = dequantize(features)
         if quantized is not None and requant_guard:
-            quantized = requantize_within_range(quantized, features)
-        if backend == "pallas":
-            if quantized is not None:
-                return ops.fused_layer_spmm(
-                    ell, quantized.q, w, bias, relu=relu,
-                    quantized_meta=(quantized.scale, quantized.x_min),
-                    interpret=self.interpret)
-            return ops.fused_layer_spmm(ell, features, w, bias, relu=relu,
-                                        interpret=self.interpret)
-        x = dequantize(quantized) if quantized is not None else features
-        return ref.fused_layer(ell.val, ell.col, x, w, bias, relu=relu)
+            quantized = _guarded_requant(quantized, features,
+                                         "run_fused_layer")
+        with obs.trace("exec.run_fused_layer", backend=backend,
+                       dtype=_dtype_tag(quantized)):
+            if obs.enabled():
+                obs.count("executor.run_fused_layer."
+                          f"{backend}.{_dtype_tag(quantized)}")
+            if backend == "pallas":
+                if quantized is not None:
+                    return ops.fused_layer_spmm(
+                        ell, quantized.q, w, bias, relu=relu,
+                        quantized_meta=(quantized.scale, quantized.x_min),
+                        interpret=self.interpret)
+                return ops.fused_layer_spmm(ell, features, w, bias,
+                                            relu=relu,
+                                            interpret=self.interpret)
+            x = dequantize(quantized) if quantized is not None else features
+            return ref.fused_layer(ell.val, ell.col, x, w, bias, relu=relu)
 
 
 _DEFAULT = PlanExecutor()

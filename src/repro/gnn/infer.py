@@ -6,6 +6,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.quantization import QuantizedFeatures, dequantize, quantize
 from repro.gnn.datasets import GraphDataset
 from repro.gnn.models import MODELS, exact_agg, make_sampled_agg
@@ -48,6 +49,25 @@ def evaluate(ds: GraphDataset, model: str, params, *, sh_width: int = 128,
     activations re-quantize within the stored range or fall back to
     float on range drift.
     """
+    # The root span an end-to-end inference hangs from: tuner, cache,
+    # sampler and executor spans all nest under this trace.
+    with obs.trace("gnn.evaluate", model=model, strategy=strategy,
+                   backend=backend, granularity=granularity,
+                   shards=shards or 0, fuse_layers=fuse_layers,
+                   quant_bits=quantize_bits or 0) as sp:
+        acc = _evaluate(ds, model, params, sh_width=sh_width,
+                        strategy=strategy, backend=backend,
+                        quantize_bits=quantize_bits, granularity=granularity,
+                        shards=shards, fuse_layers=fuse_layers,
+                        plan_cache=plan_cache, tune_kwargs=tune_kwargs)
+        sp.set(accuracy=round(acc, 4))
+        return acc
+
+
+def _evaluate(ds: GraphDataset, model: str, params, *, sh_width: int,
+              strategy: str, backend: str, quantize_bits: Optional[int],
+              granularity: str, shards: Optional[int], fuse_layers: bool,
+              plan_cache, tune_kwargs) -> float:
     _, fwd, adj_name = MODELS[model]
     adj = getattr(ds, adj_name)
     feats = ds.features

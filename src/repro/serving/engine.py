@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.graph import CSR, partition_width_buckets
 from repro.distributed.serving import SHARD_AXIS, serving_mesh, shard_devices
 from repro.serving.partition import (CSRShard, concat_shard_outputs,
@@ -442,6 +443,10 @@ class GNNServer:
             return []
         self.stats["requests"] += len(batch)
         self.stats["flushes"] += 1
+        return self._run_batch_inner(batch)
+
+    @obs.traced("engine.run_batch")
+    def _run_batch_inner(self, batch: list) -> list:
 
         results: list = [None] * len(batch)
         dense = [(t, x) for t, x in enumerate(batch) if x is not None]

@@ -54,6 +54,7 @@ from typing import Optional
 
 import jax
 
+from repro import obs
 from repro.serving.telemetry import Telemetry
 
 __all__ = ["BackpressureError", "RuntimeRequest", "ServingRuntime"]
@@ -70,10 +71,15 @@ class RuntimeRequest:
     Stamps (``time.perf_counter`` seconds, ``None`` until reached):
     ``t_enqueue`` (admitted to the queue), ``t_flush`` (its batch was
     dispatched), ``t_complete`` (device result ready, future fulfilled).
+
+    ``trace_ctx`` is the (trace_id, parent_span_id) stamped at submit
+    time — the submitting thread's active ``repro.obs`` span if any,
+    else a fresh trace — so the request's queue/device spans, emitted
+    retrospectively from the completer thread, nest under one trace.
     """
 
-    __slots__ = ("x", "t_enqueue", "t_flush", "t_complete",
-                 "batch_size", "_event", "_result", "_error")
+    __slots__ = ("x", "t_enqueue", "t_flush", "t_complete", "batch_size",
+                 "trace_ctx", "_batch_trace", "_event", "_result", "_error")
 
     def __init__(self, x, t_enqueue: float):
         self.x = x
@@ -81,6 +87,8 @@ class RuntimeRequest:
         self.t_flush: Optional[float] = None
         self.t_complete: Optional[float] = None
         self.batch_size = 0
+        self.trace_ctx = None
+        self._batch_trace: Optional[str] = None
         self._event = threading.Event()
         self._result = None
         self._error: Optional[BaseException] = None
@@ -234,12 +242,15 @@ class ServingRuntime:
                 if self._closed:
                     raise ValueError("runtime is closed")
             req = RuntimeRequest(x, time.perf_counter())
+            if obs.enabled():
+                req.trace_ctx = obs.request_context()
             self._pending.append(req)
             self._outstanding += 1
             self.telemetry.counters["submitted"] += 1
-            peak = len(self._pending)
-            if peak > self.telemetry.counters["queue_peak"]:
-                self.telemetry.counters["queue_peak"] = peak
+            depth = len(self._pending)
+            self.telemetry.counters["queue_depth"] = depth
+            if depth > self.telemetry.counters["queue_peak"]:
+                self.telemetry.counters["queue_peak"] = depth
             self._not_empty.notify()
         return req
 
@@ -319,6 +330,7 @@ class ServingRuntime:
                 trigger = "size"
             batch = [self._pending.popleft()
                      for _ in range(min(self.max_batch, len(self._pending)))]
+            self.telemetry.counters["queue_depth"] = len(self._pending)
             self._not_full.notify_all()
         return batch, trigger
 
@@ -334,7 +346,14 @@ class ServingRuntime:
                 r.batch_size = len(batch)
             self.telemetry.record_batch(len(batch), trigger)
             try:
-                outs = self.server.run_batch([r.x for r in batch])
+                # The batch span lives in the batcher thread, so engine /
+                # executor spans opened inside run_batch nest under it;
+                # each request links to it via its `batch` attribute.
+                with obs.trace("serve.batch", trigger=trigger,
+                               size=len(batch)) as bsp:
+                    for r in batch:
+                        r._batch_trace = bsp.trace_id
+                    outs = self.server.run_batch([r.x for r in batch])
             except BaseException as e:  # noqa: BLE001 — forwarded to futures
                 self._slots.release()
                 self._settle(batch, error=e)
@@ -368,18 +387,42 @@ class ServingRuntime:
 
     def _settle(self, batch, outs=None, error=None) -> None:
         now = time.perf_counter()
-        if error is not None:
+        failed = error is not None
+        if failed:
             for r in batch:
                 r._fail(error, now)
-            self.telemetry.count("failed", len(batch))
+                self.telemetry.record_request(r, failed=True)
         else:
             for r, o in zip(batch, outs):
                 r._finish(o, now)
                 self.telemetry.record_request(r, rows=self._rows)
+        if obs.enabled():
+            for r in batch:
+                self._emit_request_spans(r, failed)
         with self._mu:
             self._outstanding -= len(batch)
             if self._outstanding == 0:
                 self._idle.notify_all()
+
+    def _emit_request_spans(self, r: RuntimeRequest, failed: bool) -> None:
+        """Retrospective spans for one settled request, under the trace
+        stamped at submit(): serve.request wrapping serve.queue (enqueue
+        -> flush) and serve.device (flush -> complete)."""
+        ctx = r.trace_ctx
+        if ctx is None or r.t_complete is None:
+            return
+        trace_id, parent = ctx
+        status = "error" if failed else "ok"
+        root = obs.record_span(
+            "serve.request", r.t_enqueue, r.t_complete,
+            trace_id=trace_id, parent_id=parent, status=status,
+            batch_size=r.batch_size, batch=r._batch_trace)
+        if r.t_flush is not None:
+            obs.record_span("serve.queue", r.t_enqueue, r.t_flush,
+                            trace_id=trace_id, parent_id=root.span_id)
+            obs.record_span("serve.device", r.t_flush, r.t_complete,
+                            trace_id=trace_id, parent_id=root.span_id,
+                            status=status)
 
 
 # ---------------------------------------------------------------------------

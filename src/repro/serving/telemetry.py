@@ -22,98 +22,22 @@ request is a handful of integer increments under one lock.
 ``Telemetry.snapshot()`` is the export surface — a plain JSON-able dict —
 used by ``python -m repro.serving.runtime --smoke|--bench`` and the
 open-loop benchmark (``benchmarks/serving_throughput.py``).
+
+The histogram itself now lives in ``repro.obs.metrics`` (the shared
+observability layer); it is re-exported here unchanged.  Spans/trace IDs
+for the same requests come from ``repro.obs`` — see
+docs/observability.md.
 """
 from __future__ import annotations
 
-import math
 import threading
-from typing import Optional
+
+# LatencyHistogram moved to repro.obs.metrics (it now carries its own
+# lock and backs the generic metrics registry too); re-exported here so
+# `from repro.serving.telemetry import LatencyHistogram` keeps working.
+from repro.obs.metrics import LatencyHistogram
 
 __all__ = ["LatencyHistogram", "Telemetry"]
-
-
-class LatencyHistogram:
-    """Fixed-memory latency histogram with log-spaced buckets.
-
-    Buckets span ``[lo_us, hi_us)`` with ``per_decade`` buckets per decade
-    (default: 1us .. 1000s at 8/decade = 72 buckets); underflow clamps
-    into the first bucket, overflow into the last.  Percentiles are read
-    back with log-linear interpolation inside the hit bucket, which keeps
-    the p99 honest to within one bucket's ratio (~33% at 8/decade) while
-    the exact min/max/mean are tracked separately.
-    """
-
-    def __init__(self, lo_us: float = 1.0, hi_us: float = 1e9,
-                 per_decade: int = 8):
-        if not (0 < lo_us < hi_us):
-            raise ValueError(f"need 0 < lo_us < hi_us, got {lo_us}, {hi_us}")
-        self.lo_us = float(lo_us)
-        self.hi_us = float(hi_us)
-        decades = math.log10(hi_us / lo_us)
-        self.num_buckets = max(int(math.ceil(decades * per_decade)), 1)
-        self._log_lo = math.log10(lo_us)
-        self._scale = self.num_buckets / decades   # buckets per log10 unit
-        self.counts = [0] * self.num_buckets
-        self.count = 0
-        self.sum_us = 0.0
-        self.min_us = math.inf
-        self.max_us = 0.0
-
-    def _bucket(self, us: float) -> int:
-        if us <= self.lo_us:
-            return 0
-        idx = int((math.log10(us) - self._log_lo) * self._scale)
-        return min(idx, self.num_buckets - 1)
-
-    def _edges(self, idx: int) -> tuple[float, float]:
-        lo = 10.0 ** (self._log_lo + idx / self._scale)
-        hi = 10.0 ** (self._log_lo + (idx + 1) / self._scale)
-        return lo, hi
-
-    def record(self, us: float) -> None:
-        us = float(us)
-        if not (us >= 0.0 and math.isfinite(us)):
-            return
-        self.counts[self._bucket(us)] += 1
-        self.count += 1
-        self.sum_us += us
-        self.min_us = min(self.min_us, us)
-        self.max_us = max(self.max_us, us)
-
-    def percentile(self, p: float) -> float:
-        """The ``p``-th percentile (0..100) in microseconds, log-linearly
-        interpolated inside the hit bucket and clamped to the observed
-        min/max; 0.0 on an empty histogram."""
-        if self.count == 0:
-            return 0.0
-        target = max(min(p, 100.0), 0.0) / 100.0 * self.count
-        seen = 0
-        for idx, c in enumerate(self.counts):
-            if c == 0:
-                continue
-            if seen + c >= target:
-                frac = (target - seen) / c
-                lo, hi = self._edges(idx)
-                us = 10.0 ** (math.log10(lo)
-                              + frac * (math.log10(hi) - math.log10(lo)))
-                return float(min(max(us, self.min_us), self.max_us))
-            seen += c
-        return float(self.max_us)
-
-    @property
-    def mean_us(self) -> float:
-        return self.sum_us / self.count if self.count else 0.0
-
-    def snapshot(self) -> dict:
-        return {
-            "count": self.count,
-            "mean_us": round(self.mean_us, 1),
-            "min_us": round(self.min_us, 1) if self.count else 0.0,
-            "p50_us": round(self.percentile(50), 1),
-            "p95_us": round(self.percentile(95), 1),
-            "p99_us": round(self.percentile(99), 1),
-            "max_us": round(self.max_us, 1),
-        }
 
 
 #: The per-request stages every completed request records, as
@@ -140,7 +64,7 @@ class Telemetry:
             "submitted": 0, "completed": 0, "failed": 0, "rejected": 0,
             "batches": 0, "batches_size": 0, "batches_deadline": 0,
             "batches_drain": 0, "batch_requests": 0, "rows_served": 0,
-            "queue_peak": 0,
+            "queue_peak": 0, "queue_depth": 0,
         }
 
     # -- recording -------------------------------------------------------
@@ -150,7 +74,11 @@ class Telemetry:
             self.counters[name] = self.counters.get(name, 0) + n
 
     def observe_queue_depth(self, depth: int) -> None:
+        """Track the live queue: ``queue_depth`` is the current value (a
+        gauge — it decays as batches drain, unlike the high-water
+        ``queue_peak``)."""
         with self._mu:
+            self.counters["queue_depth"] = depth
             if depth > self.counters["queue_peak"]:
                 self.counters["queue_peak"] = depth
 
@@ -162,11 +90,20 @@ class Telemetry:
             key = f"batches_{trigger}"
             self.counters[key] = self.counters.get(key, 0) + 1
 
-    def record_request(self, request, rows: int = 0) -> None:
-        """Fold one *completed* request's stamps into the histograms."""
+    def record_request(self, request, rows: int = 0,
+                       failed: bool = False) -> None:
+        """Fold one settled request's stamps into the histograms.
+
+        Failed requests record their stage latencies too (a timed-out or
+        crashed batch is exactly the tail an operator needs to see) —
+        they bump ``failed`` instead of ``completed``/``rows_served``.
+        """
         with self._mu:
-            self.counters["completed"] += 1
-            self.counters["rows_served"] += int(rows)
+            if failed:
+                self.counters["failed"] += 1
+            else:
+                self.counters["completed"] += 1
+                self.counters["rows_served"] += int(rows)
             for name, start, end in STAGES:
                 t0 = getattr(request, start, None)
                 t1 = getattr(request, end, None)

@@ -40,6 +40,7 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.graph import CSR
 from repro.tuning import calibration, cost_model, features as features_mod, \
     measure
@@ -56,6 +57,7 @@ def _default_backends() -> tuple[str, ...]:
     return ("jax", "pallas") if jax.default_backend() == "tpu" else ("jax",)
 
 
+@obs.traced("tune", granularity="graph")
 def tune(csr: CSR, features=None, *, budget: int = 6,
          widths: Sequence[int] = DEFAULT_WIDTHS,
          backends: Sequence[str] | None = None,
@@ -144,10 +146,21 @@ def tune(csr: CSR, features=None, *, budget: int = 6,
         predicted_us=best.estimate.latency_us if best.estimate else 0.0,
         measured_spmm_us=best.spmm_us, measured_sample_us=best.sample_us,
         shard_meta=shard_meta)
+    # the auditable one-liner: what won, what the model predicted, what
+    # the microbenchmark measured (docs/observability.md)
+    obs.decision("tune", granularity="graph",
+                 strategy=best.config.strategy,
+                 sh_width=best.config.sh_width,
+                 backend=best.config.backend,
+                 quant_bits=best.config.quant_bits,
+                 predicted_us=round(plan.predicted_us, 2),
+                 measured_us=round(plan.measured_spmm_us, 2),
+                 measured_candidates=top_k)
     cache.put(plan)
     return plan
 
 
+@obs.traced("tune", granularity="block")
 def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                  widths: Sequence[int] = DEFAULT_WIDTHS,
                  strategies: Sequence[str] = ("aes", "afs", "sfs"),
@@ -355,6 +368,20 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
         plan.measured_spmm_us = measure.time_us(
             plan.run, features, warmup=warmup, iters=iters)
         _log_blocked_plan(block_feats, configs, backend, quant_bits, plan)
+    if obs.enabled():
+        # per-block W choices compressed to a "WxN" histogram, plus the
+        # slot-vs-nnz tightness the mixed widths bought (quality counter)
+        width_hist = {}
+        for w in bell.widths:
+            width_hist[w] = width_hist.get(w, 0) + 1
+        obs.decision("tune", granularity="block", backend=backend,
+                     quant_bits=quant_bits, num_blocks=len(block_feats),
+                     widths=" ".join(f"{w}x{n}" for w, n
+                                     in sorted(width_hist.items())),
+                     buckets=len(buckets),
+                     slots=int(bell.col.size), nnz=int(csr.nnz),
+                     predicted_us=round(predicted_us, 2),
+                     measured_us=round(plan.measured_spmm_us, 2))
     cache.put(plan)
     return plan
 

@@ -41,6 +41,7 @@ from dataclasses import dataclass, replace
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.graph import (DIGEST_BLOCK_ROWS, BlockELL, apply_csr_deltas,
                               combine_block_digests, csr_block_digests,
                               partition_width_buckets)
@@ -134,6 +135,7 @@ def _splice_block_ell(bell: BlockELL, csr, new_configs: dict) -> BlockELL:
         num_rows=csr.num_rows, num_cols=csr.num_cols)
 
 
+@obs.traced("incremental.apply_edge_updates")
 def apply_edge_updates(plan: BlockedPlan, csr, additions=(), deletions=(),
                        *, features=None, requant_rows=(),
                        widths=DEFAULT_WIDTHS,
@@ -211,6 +213,7 @@ def apply_edge_updates(plan: BlockedPlan, csr, additions=(), deletions=(),
     num_add, num_del = len(additions), len(deletions)
 
     if touched.size == 0 and requant_rows.size == 0:
+        obs.count("incremental.noop_patches")
         return plan, csr, DeltaReport(
             num_additions=0, num_deletions=0, touched_rows=0,
             touched_blocks=(), num_blocks=bell.num_blocks,
@@ -279,6 +282,13 @@ def apply_edge_updates(plan: BlockedPlan, csr, additions=(), deletions=(),
         predicted_us=0.0, measured_spmm_us=0.0, measured_bucket_us=())
     if cache is not None:
         cache.put(new_plan)
+    if obs.enabled():
+        obs.count("incremental.patches")
+        obs.count("incremental.blocks_touched", len(tblk))
+        obs.count("incremental.blocks_skipped",
+                  new_bell.num_blocks - len(tblk))
+        obs.count("incremental.digest_blocks_touched", len(tdig))
+        obs.count("incremental.requantized_rows", int(requant_rows.size))
     return new_plan, new_csr, DeltaReport(
         num_additions=num_add, num_deletions=num_del,
         touched_rows=int(touched.size), touched_blocks=tblk,

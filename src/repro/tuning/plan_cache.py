@@ -64,6 +64,7 @@ from typing import Optional, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.graph import ELL, BlockELL
 from repro.core.quantization import QuantizedFeatures
 from repro.tuning.cost_model import CandidateConfig
@@ -296,26 +297,36 @@ class PlanCache:
         whole-graph plan.  Hits refresh LRU recency."""
         shard_meta = normalize_shard_meta(shard_meta)
         key = self._key(fingerprint, kind, shard_meta)
-        plan = self._mem.get(key)
-        if plan is not None:
-            self._mem.move_to_end(key)
-            self.stats.hits += 1
-            return plan
-        if self.cache_dir is not None:
-            plan = self._load_disk(fingerprint, kind, shard_meta)
+        with obs.trace("plan_cache.get", kind=kind) as sp:
+            plan = self._mem.get(key)
             if plan is not None:
-                self._insert(key, plan)
+                self._mem.move_to_end(key)
                 self.stats.hits += 1
-                self.stats.disk_hits += 1
+                obs.count("plan_cache.hit_memory")
+                sp.set(tier="memory")
                 return plan
-        self.stats.misses += 1
-        return None
+            if self.cache_dir is not None:
+                plan = self._load_disk(fingerprint, kind, shard_meta)
+                if plan is not None:
+                    self._insert(key, plan)
+                    self.stats.hits += 1
+                    self.stats.disk_hits += 1
+                    obs.count("plan_cache.hit_disk")
+                    sp.set(tier="disk")
+                    return plan
+            self.stats.misses += 1
+            obs.count("plan_cache.miss")
+            sp.set(tier="miss")
+            return None
 
     def put(self, plan: AnyPlan) -> None:
-        self._insert(
-            self._key(plan.fingerprint, plan.kind, plan.shard_meta), plan)
-        if self.cache_dir is not None:
-            self._save_disk(plan)
+        with obs.trace("plan_cache.put", kind=plan.kind,
+                       disk=self.cache_dir is not None):
+            obs.count("plan_cache.put")
+            self._insert(
+                self._key(plan.fingerprint, plan.kind, plan.shard_meta), plan)
+            if self.cache_dir is not None:
+                self._save_disk(plan)
 
     def __contains__(self, fingerprint: str) -> bool:
         """True iff ``get()`` would hit for *some* (kind, shard_meta) —
@@ -469,6 +480,7 @@ class PlanCache:
         for p in entries[self.max_disk_plans:]:
             try:
                 p.unlink()
+                obs.count("plan_cache.disk_gc_evicted")
             except OSError:
                 pass  # racing process already collected it
 
