@@ -11,7 +11,7 @@ def main() -> None:
                             calibration_gain, fused_layer, incremental_update,
                             kernel_blocks, kernel_speedup, motivation,
                             obs_overhead, quant_block_gain, quant_loading,
-                            sampling_cdf, serving_throughput)
+                            reorder_gain, sampling_cdf, serving_throughput)
 
     print("name,us_per_call,derived")
     sampling_cdf.run()
@@ -33,6 +33,9 @@ def main() -> None:
     # fused layer kernel vs unfused 2-layer GCN
     # (-> BENCH_fused.json, gate: parity + speedup>1 + bytes win)
     fused_layer.run()
+    # degree-sorted vs natural row layout: padded-slot budget + bit parity
+    # (-> BENCH_reorder.json, gate: parity + slots>=1.5x + auto picks)
+    reorder_gain.run()
     # tracing/metrics cost on the fused path
     # (-> BENCH_obs.json, gate: disabled <1%, enabled <5%)
     obs_overhead.run()

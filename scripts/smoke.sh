@@ -25,6 +25,9 @@ XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 echo "== observability: traced end-to-end --smoke =="
 python -m repro.obs --smoke --json
 
+echo "== reorder: degree-sorted layout --smoke =="
+python -m benchmarks.reorder_gain --smoke
+
 echo "== benchmarks: 2-config autotune_gain slice =="
 python - <<'EOF'
 from benchmarks import autotune_gain

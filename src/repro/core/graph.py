@@ -296,6 +296,56 @@ def mean_normalize(csr: CSR) -> CSR:
     return CSR(csr.row_ptr, csr.col_ind, jnp.asarray(val), csr.num_cols)
 
 
+def permute_csr_rows(csr: CSR, perm) -> CSR:
+    """Reorder a CSR's rows by ``perm`` (row ``r`` of the result is row
+    ``perm[r]`` of the input).  Columns are untouched — the dense operand
+    of an SpMM over the permuted matrix needs no reindexing, only the
+    *output* rows come back permuted.
+
+    Host-side numpy rebuild: one vectorized gather over the edge arrays,
+    one device crossing for the result.  Per-row edge order (and therefore
+    SpMM accumulation order) is preserved, so row ``r`` of the permuted
+    matrix is byte-identical to row ``perm[r]`` of the input.
+    """
+    perm = np.asarray(perm, np.int64)
+    rp = np.asarray(csr.row_ptr, np.int64)
+    nnz = rp[1:] - rp[:-1]
+    counts = nnz[perm]
+    new_rp = np.zeros(csr.num_rows + 1, np.int64)
+    np.cumsum(counts, out=new_rp[1:])
+    # edge i of the output copies from its source row's slice: offset
+    # within the row is (i - new_row_start), shifted to the old row start
+    idx = (np.repeat(rp[perm] - new_rp[:-1], counts)
+           + np.arange(int(new_rp[-1]), dtype=np.int64))
+    return CSR(jnp.asarray(new_rp.astype(np.int32)),
+               jnp.asarray(np.asarray(csr.col_ind)[idx]),
+               jnp.asarray(np.asarray(csr.val)[idx]),
+               num_cols=csr.num_cols)
+
+
+def degree_sort_permutation(csr: CSR):
+    """Stable nnz-descending row permutation — the load-balancing layout
+    trick (MindSpore CSR / ES-SpMM lineage): sorting rows by degree before
+    blocking packs hub rows into a few wide blocks and leaves the sparse
+    tail in narrow ones, so per-block ELL widths tighten and the width
+    buckets collapse.
+
+    Returns ``(perm, inv_perm, permuted_csr)`` where ``permuted_csr ==
+    permute_csr_rows(csr, perm)`` (columns untouched), ``perm[p]`` is the
+    natural row id at permuted position ``p``, and ``inv_perm[r]`` is the
+    permuted position of natural row ``r`` — so an output computed in
+    permuted order is restored by ``out[inv_perm]``.  The sort is stable
+    (equal-degree rows keep their natural order), making the permutation a
+    pure function of the degree sequence.
+    """
+    rp = np.asarray(csr.row_ptr, np.int64)
+    nnz = rp[1:] - rp[:-1]
+    perm = np.argsort(-nnz, kind="stable").astype(np.int64)
+    inv_perm = np.empty_like(perm)
+    inv_perm[perm] = np.arange(perm.size, dtype=np.int64)
+    return perm, inv_perm, permute_csr_rows(csr, perm)
+
+
 def csr_to_dense(csr: CSR) -> jax.Array:
     """Densify: f32[num_rows, num_cols] with duplicate edges accumulated —
     the exact reference the sampled kernels are tested against."""

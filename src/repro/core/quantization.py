@@ -98,6 +98,35 @@ def requantize_rows(qf: QuantizedFeatures, rows, values) -> QuantizedFeatures:
     return qf._replace(q=q)
 
 
+#: Fraction of the stored quantization span by which the operand's value
+#: range may move before riding the stored ``(x_min, x_max)`` counts as
+#: silent degradation: past it, :func:`requantize_within_range` re-derives
+#: the range instead of re-encoding against the stale one, and the
+#: incremental patch path (``tuning.incremental``) triggers a full
+#: re-quantization of the plan's cached operand.
+DRIFT_THRESHOLD = 0.25
+
+
+def range_drift(qf: QuantizedFeatures, x) -> float:
+    """How far ``x``'s value range has moved from ``qf``'s stored
+    ``(x_min, x_max)``, as a fraction of the stored span.
+
+    Zero for the exact matrix the range was derived from (and for any
+    ``x`` whose min/max coincide with the stored bounds); captures *both*
+    overhang (values outside the range, which would clip) and shrinkage
+    (the range is now much wider than the data, wasting quantization
+    levels on empty headroom) — either one degrades reconstruction
+    accuracy while staying invisible to a pure in-range check.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.size == 0:
+        return 0.0
+    span = float(qf.x_max - qf.x_min)
+    span = max(span, float(jnp.finfo(jnp.float32).tiny))
+    return max(abs(float(x.min()) - float(qf.x_min)),
+               abs(float(x.max()) - float(qf.x_max))) / span
+
+
 def requantize_within_range(qf: QuantizedFeatures, x) -> QuantizedFeatures | None:
     """Re-encode a *full* matrix ``x`` (Eq. 1) with ``qf``'s stored range,
     or return ``None`` when the range no longer covers it.
@@ -110,6 +139,15 @@ def requantize_within_range(qf: QuantizedFeatures, x) -> QuantizedFeatures | Non
     past it, clipping to the stored ``(x_min, x_max)`` would silently lose
     information and the caller must fall back to the float path.
 
+    An in-range operand can still have *drifted*: when the data now
+    occupies only a sliver of the stored span (gradual shrinkage), most
+    quantization levels encode empty headroom and the effective precision
+    collapses while the half-step boundary check stays green.  Past
+    :data:`DRIFT_THRESHOLD` the matrix is re-quantized with a freshly
+    derived range instead (still a valid ``QuantizedFeatures`` — callers
+    use the returned operand's own scale/x_min, so the swap is
+    transparent).
+
     ``x`` need not share ``qf``'s shape — only its value range matters —
     so a ``[nodes, hidden]`` activation can ride a plan quantized from the
     ``[nodes, feat]`` input.  For ``x == dequantize(qf)`` the round trip
@@ -121,6 +159,8 @@ def requantize_within_range(qf: QuantizedFeatures, x) -> QuantizedFeatures | Non
     drift = (x.min() < qf.x_min - half_step) | (x.max() > qf.x_max + half_step)
     if bool(drift):
         return None
+    if range_drift(qf, x) > DRIFT_THRESHOLD:
+        return quantize(x, qf.bits)
     return QuantizedFeatures(q=_quantize(x, qf.x_min, qf.x_max, qf.bits),
                              x_min=qf.x_min, x_max=qf.x_max, bits=qf.bits)
 

@@ -59,11 +59,17 @@ def _dtype_tag(quantized: Optional[QuantizedFeatures]) -> str:
 def _guarded_requant(quantized, features, site: str):
     """Range-guard re-encode + the drift-fallback quality counter: how
     often a hidden-layer activation could ride the stored quantization
-    range vs. fell back to the float path."""
+    range vs. fell back to the float path (or, for in-range operands whose
+    distribution shrank past the drift threshold, got a freshly derived
+    range — see ``quantization.requantize_within_range``)."""
     requanted = requantize_within_range(quantized, features)
     if obs.enabled():
         obs.count("quant.requant_in_range" if requanted is not None
                   else "quant.requant_drift_fallback")
+        if requanted is not None and (
+                float(requanted.x_min) != float(quantized.x_min)
+                or float(requanted.x_max) != float(quantized.x_max)):
+            obs.count("quant.requant_range_refreshed")
         obs.count(f"quant.requant_{site}")
     return requanted
 
@@ -128,7 +134,7 @@ class PlanExecutor:
     # ------------------------------------------------------------------
     def run_block(self, bell, features, *, backend: str = "jax",
                   quantized: Optional[QuantizedFeatures] = None,
-                  buckets=None):
+                  buckets=None, inv_perm=None):
         """Width-bucketed block-dispatched SpMM over a BlockELL operand.
 
         Args:
@@ -140,6 +146,12 @@ class PlanExecutor:
           quantized: pre-quantized operand (already guard-verified).
           buckets: tuned width-bucket partition; ``None``/empty lets the
             kernel wrapper compute one.
+          inv_perm: output row gather restoring natural order when the
+            BlockELL was stitched over a row-permuted CSR (degree-sorted
+            plans): row ``r`` of the result is permuted row
+            ``inv_perm[r]``.  The input needs no permuting — columns are
+            untouched by a row reorder — so this epilogue is the entire
+            runtime cost of the layout.
         """
         with obs.trace("exec.run_block", backend=backend,
                        dtype=_dtype_tag(quantized)):
@@ -150,18 +162,22 @@ class PlanExecutor:
                 from repro.kernels import ops
 
                 if quantized is not None:
-                    return ops.block_ell_spmm(
+                    out = ops.block_ell_spmm(
                         bell, quantized.q,
                         quantized_meta=(quantized.scale, quantized.x_min),
                         buckets=buckets or None, interpret=self.interpret)
-                return ops.block_ell_spmm(bell, features,
-                                          buckets=buckets or None,
-                                          interpret=self.interpret)
-            from repro.kernels import ref
+                else:
+                    out = ops.block_ell_spmm(bell, features,
+                                             buckets=buckets or None,
+                                             interpret=self.interpret)
+            else:
+                from repro.kernels import ref
 
-            if quantized is not None:
-                return ref.quant_block_ell_spmm(bell, quantized)
-            return ref.block_ell_spmm(bell, features)
+                if quantized is not None:
+                    out = ref.quant_block_ell_spmm(bell, quantized)
+                else:
+                    out = ref.block_ell_spmm(bell, features)
+            return out if inv_perm is None else out[inv_perm]
 
     # ------------------------------------------------------------------
     # plans
@@ -196,7 +212,8 @@ class PlanExecutor:
                 obs.count("executor.run_plan.block")
                 return self.run_block(plan.bell, features,
                                       backend=plan.backend,
-                                      quantized=q, buckets=plan.buckets)
+                                      quantized=q, buckets=plan.buckets,
+                                      inv_perm=plan.inv_perm())
         q = plan.quantized
         if q is not None and not assume_tuned \
                 and features_fingerprint(features) != plan.features_fp:
@@ -215,7 +232,7 @@ class PlanExecutor:
     def run_fused_layer(self, ell, features, w, bias, *, relu: bool = True,
                         backend: str = "pallas",
                         quantized: Optional[QuantizedFeatures] = None,
-                        requant_guard: bool = False):
+                        requant_guard: bool = False, inv_perm=None):
         """One whole GNN layer — gather + (dequant) + SpMM + dense
         transform + activation — as a single execution step.
 
@@ -225,7 +242,11 @@ class PlanExecutor:
         ``ref.fused_layer`` oracle.  ``requant_guard`` carries the same
         drift semantics as :meth:`run_ell`, which is what lets layer 2+
         ride a quantized plan: in-range activations are re-encoded with
-        the stored range, drifted ones fall back to float.
+        the stored range, drifted ones fall back to float.  ``inv_perm``
+        restores natural row order when ``ell`` was sampled from a
+        row-permuted CSR (same epilogue semantics as :meth:`run_block`;
+        row-wise activations commute with the row gather, so applying it
+        after the fused transform is exact).
         """
         from repro.kernels import ops, ref
 
@@ -241,15 +262,20 @@ class PlanExecutor:
                           f"{backend}.{_dtype_tag(quantized)}")
             if backend == "pallas":
                 if quantized is not None:
-                    return ops.fused_layer_spmm(
+                    out = ops.fused_layer_spmm(
                         ell, quantized.q, w, bias, relu=relu,
                         quantized_meta=(quantized.scale, quantized.x_min),
                         interpret=self.interpret)
-                return ops.fused_layer_spmm(ell, features, w, bias,
-                                            relu=relu,
-                                            interpret=self.interpret)
-            x = dequantize(quantized) if quantized is not None else features
-            return ref.fused_layer(ell.val, ell.col, x, w, bias, relu=relu)
+                else:
+                    out = ops.fused_layer_spmm(ell, features, w, bias,
+                                               relu=relu,
+                                               interpret=self.interpret)
+            else:
+                x = dequantize(quantized) if quantized is not None \
+                    else features
+                out = ref.fused_layer(ell.val, ell.col, x, w, bias,
+                                      relu=relu)
+            return out if inv_perm is None else out[inv_perm]
 
 
 _DEFAULT = PlanExecutor()

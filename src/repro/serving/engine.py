@@ -93,6 +93,15 @@ class _SpmdBundle:
                  plans: Sequence[BlockedPlan], features,
                  max_buckets: int = 3):
         num = len(shards)
+        for p in plans:
+            if getattr(p, "perm", None) is not None:
+                # The bundle's destination-row index assumes block b's rows
+                # land at [b*br, (b+1)*br) in natural order; a degree-sorted
+                # plan's rows land at perm[those] instead and would need a
+                # per-shard inverse scatter the SPMD body doesn't carry.
+                raise ValueError(
+                    "spmd mode does not support degree-sorted (row-"
+                    "permuted) plans; use mode='loop' or layout='natural'")
         self.mesh = serving_mesh(num)
         self.num_shards = num
         self.rows = [s.num_rows for s in shards]
@@ -540,6 +549,7 @@ class GNNServer:
                 "rows": sh.num_rows,
                 "halo": sh.num_halo,
                 "blocks": p.bell.num_blocks,
+                "layout": p.row_layout,
                 "widths": list(p.bell.widths),
                 "buckets": [[w, len(ids)] for w, ids in p.buckets],
                 "quant_bits": None if p.quantized is None

@@ -190,6 +190,58 @@ def _extend_halo(shard: CSRShard, new_cols) -> CSRShard:
                                gather_index=gather)
 
 
+def _halo_unreferenced(shard: CSRShard, l_adds, l_dels) -> bool:
+    """Would applying these (shard-local) deltas leave any halo column with
+    zero referencing edges?  Exact: a deletion removes *every* stored
+    instance of its (row, col) pair (``apply_csr_deltas`` semantics), so
+    duplicate edges are counted from the CSR itself, not assumed unique."""
+    n_local = shard.num_local
+    n_halo = len(shard.halo_ids)
+    if n_halo == 0 or not l_dels:
+        return False
+    rp = np.asarray(shard.csr.row_ptr, np.int64)
+    cols = np.asarray(shard.csr.col_ind, np.int64)
+    ref = np.bincount(cols[cols >= n_local] - n_local, minlength=n_halo)
+    for lr, lc in l_dels:
+        if lc >= n_local:
+            seg = cols[rp[lr]:rp[lr + 1]]
+            ref[lc - n_local] -= int((seg == lc).sum())
+    for e in l_adds:
+        lc = int(e[1])
+        if lc >= n_local:
+            ref[lc - n_local] += 1
+    return bool((ref <= 0).any())
+
+
+def _compact_halo(shard: CSRShard) -> CSRShard:
+    """Drop halo ids no longer referenced by any edge, remapping the local
+    CSR's column space and gather index — the shrink counterpart of
+    :func:`_extend_halo`.  A no-op when every halo id is still referenced.
+
+    Without this, a long delete stream permanently inflates the per-batch
+    cross-shard gather (``gather_index`` keeps ferrying feature rows no
+    edge reads): wasted bandwidth that only ever grows.
+    """
+    from repro.core.graph import CSR
+
+    n_local = shard.num_local
+    cols = np.asarray(shard.csr.col_ind, np.int64)
+    used_pos = np.unique(cols[cols >= n_local]) - n_local
+    if used_pos.size == len(shard.halo_ids):
+        return shard
+    new_halo = np.asarray(shard.halo_ids, np.int64)[used_pos]
+    remapped = np.where(
+        cols < n_local, cols,
+        n_local + np.searchsorted(used_pos,
+                                  np.clip(cols - n_local, 0, None)))
+    csr = CSR(shard.csr.row_ptr, jnp.asarray(remapped.astype(np.int32)),
+              shard.csr.val, num_cols=n_local + len(new_halo))
+    gather = np.concatenate([
+        np.arange(shard.row_start, shard.row_stop, dtype=np.int64), new_halo])
+    return dataclasses.replace(shard, csr=csr, halo_ids=new_halo,
+                               gather_index=gather)
+
+
 def apply_edge_updates_sharded(shards: Sequence[CSRShard],
                                plans: Sequence[BlockedPlan],
                                additions=(), deletions=(), features=None, *,
@@ -203,16 +255,18 @@ def apply_edge_updates_sharded(shards: Sequence[CSRShard],
     path:
 
       * **patch** — all referenced columns already exist in the shard's
-        local+halo space: ``repro.tuning.incremental.apply_edge_updates``
-        patches the shard's cached plan in place (touched blocks only, no
-        measurement).  Deletions always patch — a deleted edge may leave
-        its halo id unreferenced, which costs one stale gather row, not
-        correctness.
-      * **re-tune** — an addition references a column outside the halo:
-        every remapped column id past the insertion point shifts, so the
-        shard is rebuilt with the extended halo (:func:`_extend_halo`) and
-        its plan re-tuned cold (``refresh=True``).  Rare in practice: new
-        edges mostly land inside a shard or its existing neighborhood.
+        local+halo space and every halo id stays referenced:
+        ``repro.tuning.incremental.apply_edge_updates`` patches the
+        shard's cached plan in place (touched blocks only, no
+        measurement).
+      * **re-tune** — the halo set changes: an addition references a
+        column outside the halo (grow, :func:`_extend_halo`), or a
+        deletion leaves a halo id with no referencing edge (shrink,
+        :func:`_compact_halo` — otherwise a long delete stream permanently
+        inflates the cross-shard gather).  Either way remapped column ids
+        shift, so the shard is rebuilt and its plan re-tuned cold
+        (``refresh=True``).  Rare in practice: most deltas land inside a
+        shard or its existing neighborhood.
       * **untouched** — shards owning no touched rows keep shard and plan
         by identity (their fingerprints never move).
 
@@ -227,7 +281,8 @@ def apply_edge_updates_sharded(shards: Sequence[CSRShard],
         and re-tuned shards stay on the original grid.
 
     Returns ``(new_shards, new_plans, report)`` where ``report`` maps
-    ``"patched"`` / ``"retuned"`` / ``"untouched"`` to shard-index lists
+    ``"patched"`` / ``"retuned"`` / ``"untouched"`` to shard-index lists,
+    ``"halo_shrunk"`` to the (re-tuned) shards whose halo was compacted,
     and ``"reports"`` to the per-shard ``DeltaReport`` of each patched
     shard.
     """
@@ -241,7 +296,8 @@ def apply_edge_updates_sharded(shards: Sequence[CSRShard],
                                    "machine") if k in kw}
     routed = route_edge_deltas(shards, additions, deletions)
     new_shards, new_plans = list(shards), list(plans)
-    report = {"patched": [], "retuned": [], "untouched": [], "reports": {}}
+    report = {"patched": [], "retuned": [], "untouched": [],
+              "halo_shrunk": [], "reports": {}}
     for i, (sh, plan, (adds, dels)) in enumerate(
             zip(shards, plans, routed)):
         if not adds and not dels:
@@ -256,19 +312,25 @@ def apply_edge_updates_sharded(shards: Sequence[CSRShard],
                 f"deletion column(s) {sorted(set(missing_del))[:4]} not in "
                 f"shard {i}'s local+halo space (edge not present)")
         sm = shard_meta_for(sh, mesh_shape)
-        if missing:
-            # halo growth: remapped ids shift — rebuild shard, re-tune cold
+        shrink = _halo_unreferenced(sh, l_adds, l_dels)
+        if missing or shrink:
+            # halo set changes (growth, shrink, or both): remapped ids
+            # shift — rebuild shard, re-tune cold
             from repro.core.graph import apply_csr_deltas
             from repro.tuning.autotune import tune_blocked
 
-            sh = _extend_halo(sh, missing)
-            l_adds, still = _translate_local(sh, adds, with_val=True)
-            l_dels, _ = _translate_local(sh, dels, with_val=False)
-            assert not still, "halo extension missed columns"
+            if missing:
+                sh = _extend_halo(sh, missing)
+                l_adds, still = _translate_local(sh, adds, with_val=True)
+                l_dels, _ = _translate_local(sh, dels, with_val=False)
+                assert not still, "halo extension missed columns"
             new_csr, _ = apply_csr_deltas(sh.csr, l_adds, l_dels)
             sh = dataclasses.replace(sh, csr=new_csr)
+            if shrink:
+                sh = _compact_halo(sh)
+                report["halo_shrunk"].append(i)
             feats = sh.gather(features) if features is not None else None
-            new_plans[i] = tune_blocked(new_csr, feats, cache=cache,
+            new_plans[i] = tune_blocked(sh.csr, feats, cache=cache,
                                         shard_meta=sm, refresh=True, **kw)
             new_shards[i] = sh
             report["retuned"].append(i)

@@ -294,12 +294,16 @@ class ServingRuntime:
         self.close()
 
     def snapshot(self) -> dict:
-        """Telemetry export plus live queue state."""
+        """Telemetry export plus live queue state, merged with the
+        process-wide ``repro.obs`` metrics snapshot (executor dispatch
+        cells, sampler/cache/quantization quality counters) — one dict, so
+        a scrape of the runtime sees the whole stack it drives."""
         out = self.telemetry.snapshot()
         with self._mu:
             out["pending"] = len(self._pending)
             out["outstanding"] = self._outstanding
             out["closed"] = self._closed
+        out["obs"] = obs.snapshot()
         return out
 
     # -- worker loops ----------------------------------------------------

@@ -57,6 +57,50 @@ def _default_backends() -> tuple[str, ...]:
     return ("jax", "pallas") if jax.default_backend() == "tpu" else ("jax",)
 
 
+def _rank_blocks(csr, block_rows, feat_dim, strategies, widths,
+                 include_full, backend, quant_bits, machine,
+                 accuracy_weight, verbose=False, tag=""):
+    """Analytic per-block ranking over one row layout: extract block
+    features and pick the (strategy, W) winner per block.  Returns
+    ``(block_feats, configs, predicted_us)`` — deterministic, so ranking
+    the same CSR twice (e.g. both layouts of an ``layout="auto"`` tune)
+    always lands on the same table."""
+    block_feats = features_mod.extract_block_features(
+        csr, block_rows, feat_dim=feat_dim)
+    configs, predicted_us = [], 0.0
+    for b, bf in enumerate(block_feats):
+        candidates = [CandidateConfig(s, w, backend, quant_bits)
+                      for s in strategies for w in widths]
+        if include_full:
+            candidates.append(
+                CandidateConfig("full", 0, backend, quant_bits))
+        best = cost_model.rank(bf, candidates, machine, accuracy_weight)[0]
+        configs.append((best.config.strategy, best.config.sh_width))
+        predicted_us += best.latency_us
+        if verbose:
+            print(f"  {tag}block {b:4d} rows={bf.num_rows} nnz={bf.nnz} "
+                  f"max={bf.max_row_nnz} -> {best.config.key()}")
+    return block_feats, configs, predicted_us
+
+
+def _layout_cost(block_feats, configs, predicted_us, machine,
+                 max_buckets) -> float:
+    """Launch-adjusted analytic latency of one ranked layout, comparable
+    across layouts before either is sampled: the per-block sum minus the
+    per-kernel launch overhead the stitched plan's bucketed dispatch
+    amortizes.  Bucket count is estimated from the *approximate* per-block
+    widths ("full" blocks priced at their max row nnz) — the stitched
+    widths aren't known until sampling, but bucketing only depends on the
+    width multiset, which these approximations track."""
+    from repro.core.graph import partition_width_buckets
+
+    approx = [max(int(bf.max_row_nnz), 1) if s == "full" else max(int(w), 1)
+              for bf, (s, w) in zip(block_feats, configs)]
+    buckets = partition_width_buckets(tuple(approx), max_buckets)
+    return predicted_us - (len(block_feats) - max(len(buckets), 1)) \
+        * machine.launch_overhead_us
+
+
 @obs.traced("tune", granularity="graph")
 def tune(csr: CSR, features=None, *, budget: int = 6,
          widths: Sequence[int] = DEFAULT_WIDTHS,
@@ -167,6 +211,7 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                  backend: str | None = None,
                  include_full: bool = True,
                  quant=None,
+                 layout: str = "natural",
                  max_buckets: int = 3,
                  machine: MachineModel | None = None,
                  accuracy_weight: float = 5.0,
@@ -214,6 +259,17 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
         encode that same matrix — content equality of a lossy encoding is
         unverifiable).  The pallas backend then fuses Eq. 2 into the
         B-row gather; the jax backend dequantizes up front.
+      layout: row layout of the stitched operand — "natural" (node
+        order), "degree_sorted" (rows stably sorted nnz-descending
+        before blocking, so hub rows pack into a few wide blocks and
+        per-block widths tighten; the executor restores natural order
+        via an inverse-permutation output gather, so results are
+        bit-identical), or "auto" (rank both layouts with the calibrated
+        cost model — launch-adjusted per-block latency sums — and keep
+        the cheaper; ties go to natural, which has no epilogue).  The
+        layout is part of the cache key, so both layouts of one graph
+        coexist; the fingerprint itself is always computed over the
+        natural-order CSR.
       max_buckets: kernel-launch budget for width bucketing (pallas
         backend): blocks are grouped into at most this many width buckets,
         one launch each with a static row-DMA width of the bucket max.
@@ -244,12 +300,17 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
 
     cache = cache if cache is not None else default_cache()
     shard_meta = normalize_shard_meta(shard_meta)
+    if layout not in ("natural", "degree_sorted", "auto"):
+        raise ValueError(f"unknown layout {layout!r}; expected 'natural', "
+                         "'degree_sorted', or 'auto'")
     # one digest pass serves both the cache key and the plan's stored
     # per-block digests (what apply_edge_updates rolls forward on a delta)
+    # — always over the natural-order CSR, whatever layout wins below
     digests = csr_block_digests(csr)
     fp = combine_block_digests(digests, csr.num_rows, csr.num_cols)
     plan = None if refresh \
-        else cache.get(fp, kind="block", shard_meta=shard_meta)
+        else cache.get(fp, kind="block", shard_meta=shard_meta,
+                       layout=layout)
     if plan is not None:
         return plan
 
@@ -297,28 +358,47 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
         qf = as_quantized(features, quant_bits)
     feat_dim = int(features.shape[1])
 
-    block_feats = features_mod.extract_block_features(
-        csr, block_rows, feat_dim=feat_dim)
     if machine is None:
         # resolve once — re-resolving (and memo-probing) per block would
         # stat the calibration log num_blocks times; fall back to the
         # explicit default so rank() never re-resolves either
         machine = calibration.calibrated_machine_model() or MachineModel()
-    configs, predicted_us = [], 0.0
-    for b, bf in enumerate(block_feats):
-        candidates = [CandidateConfig(s, w, backend, quant_bits)
-                      for s in strategies for w in widths]
-        if include_full:
-            candidates.append(
-                CandidateConfig("full", 0, backend, quant_bits))
-        best = cost_model.rank(bf, candidates, machine, accuracy_weight)[0]
-        configs.append((best.config.strategy, best.config.sh_width))
-        predicted_us += best.latency_us
-        if verbose:
-            print(f"  block {b:4d} rows={bf.num_rows} nnz={bf.nnz} "
-                  f"max={bf.max_row_nnz} -> {best.config.key()}")
 
-    bell = sample_csr_to_block_ell(csr, configs, block_rows)
+    # -- resolve the row layout -------------------------------------------
+    rank_kw = dict(block_rows=block_rows, feat_dim=feat_dim,
+                   strategies=strategies, widths=widths,
+                   include_full=include_full, backend=backend,
+                   quant_bits=quant_bits, machine=machine,
+                   accuracy_weight=accuracy_weight, verbose=verbose)
+    perm = None
+    if layout == "natural":
+        block_feats, configs, predicted_us = _rank_blocks(csr, **rank_kw)
+    else:
+        from repro.core.graph import degree_sort_permutation
+
+        sperm, _, sorted_csr = degree_sort_permutation(csr)
+        if layout == "degree_sorted":
+            perm = sperm
+            block_feats, configs, predicted_us = _rank_blocks(
+                sorted_csr, **dict(rank_kw, tag="sorted "))
+        else:   # "auto": rank both, keep the cheaper (tie -> natural)
+            nat = _rank_blocks(csr, **dict(rank_kw, verbose=False))
+            srt = _rank_blocks(sorted_csr,
+                               **dict(rank_kw, verbose=False))
+            nat_cost = _layout_cost(*nat, machine, max_buckets)
+            srt_cost = _layout_cost(*srt, machine, max_buckets)
+            if srt_cost < nat_cost:
+                perm = sperm
+                block_feats, configs, predicted_us = srt
+            else:
+                block_feats, configs, predicted_us = nat
+            if verbose:
+                print(f"  layout auto: natural={nat_cost:.1f}us "
+                      f"degree_sorted={srt_cost:.1f}us -> "
+                      f"{'degree_sorted' if perm is not None else 'natural'}")
+
+    bell = sample_csr_to_block_ell(
+        csr if perm is None else sorted_csr, configs, block_rows)
 
     # -- width buckets: candidate partitions, measured per bucket ---------
     cand_parts = []
@@ -363,7 +443,8 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
                        predicted_us=predicted_us,
                        measured_bucket_us=bucket_us,
                        shard_meta=shard_meta,
-                       block_digests=tuple(digests))
+                       block_digests=tuple(digests),
+                       layout=layout, perm=perm)
     if measure_plan:
         plan.measured_spmm_us = measure.time_us(
             plan.run, features, warmup=warmup, iters=iters)
@@ -375,6 +456,7 @@ def tune_blocked(csr: CSR, features=None, *, block_rows: int = 4096,
         for w in bell.widths:
             width_hist[w] = width_hist.get(w, 0) + 1
         obs.decision("tune", granularity="block", backend=backend,
+                     layout=plan.row_layout,
                      quant_bits=quant_bits, num_blocks=len(block_feats),
                      widths=" ".join(f"{w}x{n}" for w, n
                                      in sorted(width_hist.items())),
@@ -506,10 +588,11 @@ def _run_cli(args: argparse.Namespace) -> dict:
     if args.granularity == "block":
         plan = tune_blocked(csr, ds.features, block_rows=args.block_rows,
                             widths=widths, quant=8 if args.quant else None,
+                            layout=args.layout,
                             cache=cache, verbose=args.verbose)
         t0 = time.perf_counter()
         tune_blocked(csr, ds.features, block_rows=args.block_rows,
-                     cache=cache)
+                     layout=args.layout, cache=cache)
         hit_us = (time.perf_counter() - t0) * 1e6
         from collections import Counter
         report = {
@@ -517,6 +600,7 @@ def _run_cli(args: argparse.Namespace) -> dict:
             "nodes": csr.num_rows,
             "edges": csr.nnz,
             "granularity": "block",
+            "layout": plan.row_layout,
             "block_rows": plan.block_rows,
             "num_blocks": plan.bell.num_blocks,
             "block_configs": dict(Counter(
@@ -586,6 +670,13 @@ def main(argv: Sequence[str] | None = None) -> None:
                    help="one global config, or per-row-block mixed widths")
     p.add_argument("--block-rows", type=int, default=4096,
                    help="rows per block for --granularity block")
+    p.add_argument("--layout",
+                   choices=("natural", "degree_sorted", "auto"),
+                   default="natural",
+                   help="row layout for --granularity block: natural node "
+                        "order, degree-sorted (rows sorted nnz-descending "
+                        "before blocking, inverse-permuted on output), or "
+                        "cost-model auto-pick")
     p.add_argument("--shards", type=int, default=0,
                    help="tune per-shard serving plans over an N-way row "
                         "partition (repro.serving; implies blocked plans)")

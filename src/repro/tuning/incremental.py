@@ -24,7 +24,13 @@ Because per-block ranking is analytic and deterministic
 ``tune_blocked`` of the patched graph under the same grid — configs,
 operand bytes, buckets, and fingerprint all match (the differential suite
 in ``tests/test_incremental.py`` and the ``delta-patched`` conformance
-path pin this).  What a patch skips is everything that makes cold tuning
+path pin this).  Degree-sorted plans (``layout="degree_sorted"``) compose
+deltas through their *stored* permutation — the perm is frozen at tune
+time, since re-deriving it from the patched degrees would reshuffle every
+block and forfeit splice locality — so their operand bytes match a cold
+tune *under the same perm*; the fingerprint (always natural-order) and
+the executed outputs (inverse-permuted by the executor) still match the
+natural path exactly.  What a patch skips is everything that makes cold tuning
 slow: full-CSR hashing, per-block feature extraction and ranking of
 untouched blocks, re-sampling of untouched segments, full re-quantization,
 and all measurement (``benchmarks/incremental_update.py`` gates the >10x).
@@ -65,6 +71,9 @@ class DeltaReport:
     requantized_rows: int
     fingerprint: str            # the patched plan's (new) cache key
     version: int                # the patched plan's version
+    quant_drift: float = 0.0    # worst feature-range drift carried so far
+    requant_refreshed: bool = False  # drift crossed the threshold: the
+    # quantization range was re-derived and the full operand re-encoded
 
     @property
     def blocks_skipped(self) -> int:
@@ -239,7 +248,25 @@ def apply_edge_updates(plan: BlockedPlan, csr, additions=(), deletions=(),
                                    new_csr.num_cols)
 
     # -- re-rank + re-sample only touched plan blocks ---------------------
-    tblk = tuple(int(b) for b in np.unique(touched // bell.block_rows))
+    # A degree-sorted plan composes the delta through its *stored*
+    # permutation: touched natural rows are remapped to their permuted
+    # positions (the perm is frozen — re-deriving it from the patched
+    # degrees would reshuffle every block and forfeit splice locality), so
+    # only the permuted blocks owning touched rows re-rank and re-sample.
+    # The fingerprint above stays natural-order, exactly as a cold tune
+    # computes it.
+    if plan.perm is not None:
+        perm = np.asarray(plan.perm, np.int64)
+        inv_perm = np.empty_like(perm)
+        inv_perm[perm] = np.arange(perm.size, dtype=np.int64)
+        from repro.core.graph import permute_csr_rows
+
+        splice_csr = permute_csr_rows(new_csr, perm)
+        tblk = tuple(int(b) for b in
+                     np.unique(inv_perm[touched] // bell.block_rows))
+    else:
+        splice_csr = new_csr
+        tblk = tuple(int(b) for b in np.unique(touched // bell.block_rows))
     if features is not None:
         feat_dim = int(np.shape(features)[1])
     else:
@@ -250,14 +277,14 @@ def apply_edge_updates(plan: BlockedPlan, csr, additions=(), deletions=(),
                        include_full)
     new_configs = {}
     for b, bf in zip(tblk, features_mod.extract_block_features(
-            new_csr, bell.block_rows, feat_dim=feat_dim, blocks=tblk)):
+            splice_csr, bell.block_rows, feat_dim=feat_dim, blocks=tblk)):
         best = cost_model.rank(bf, grid, machine, accuracy_weight)[0]
         new_configs[b] = (best.config.strategy, best.config.sh_width)
         if verbose:
             print(f"  patch block {b:4d} rows={bf.num_rows} nnz={bf.nnz} "
                   f"-> {best.config.key()}")
 
-    new_bell = _splice_block_ell(bell, new_csr, new_configs) if tblk \
+    new_bell = _splice_block_ell(bell, splice_csr, new_configs) if tblk \
         else bell
     # analytic bucket choice, as in tune_blocked's measurement-free branch
     # (finest partition within the launch budget); unchanged widths keep
@@ -268,17 +295,34 @@ def apply_edge_updates(plan: BlockedPlan, csr, additions=(), deletions=(),
 
     # -- re-quantize only touched feature rows ----------------------------
     new_qf, new_ffp = qf, plan.features_fp
+    quant_drift = plan.quant_drift
+    requant_refreshed = False
     if requant_rows.size:
-        from repro.core.quantization import requantize_rows
+        from repro.core.quantization import (DRIFT_THRESHOLD, quantize,
+                                             range_drift, requantize_rows)
 
-        new_qf = requantize_rows(
-            qf, requant_rows, np.asarray(features)[requant_rows])
+        # Track how far the updated feature distribution has moved from
+        # the stored (x_min, x_max).  Gradual drift can stay "in range"
+        # per patch while the data migrates to a sliver of the span (or
+        # creeps past it, clipping) — the accumulated worst-case statistic
+        # catches it, and past the threshold the whole operand is
+        # re-encoded against a freshly derived range.
+        quant_drift = max(quant_drift, range_drift(qf, features))
+        if quant_drift > DRIFT_THRESHOLD:
+            new_qf = quantize(jnp.asarray(features, jnp.float32), qf.bits)
+            quant_drift = 0.0
+            requant_refreshed = True
+            obs.count("incremental.requant_refreshed")
+        else:
+            new_qf = requantize_rows(
+                qf, requant_rows, np.asarray(features)[requant_rows])
         new_ffp = features_fingerprint(features)
 
     new_plan = replace(
         plan, bell=new_bell, fingerprint=new_fp,
         block_digests=tuple(digests), version=plan.version + 1,
         buckets=buckets, quantized=new_qf, features_fp=new_ffp,
+        quant_drift=quant_drift,
         predicted_us=0.0, measured_spmm_us=0.0, measured_bucket_us=())
     if cache is not None:
         cache.put(new_plan)
@@ -294,4 +338,6 @@ def apply_edge_updates(plan: BlockedPlan, csr, additions=(), deletions=(),
         touched_rows=int(touched.size), touched_blocks=tblk,
         num_blocks=new_bell.num_blocks, touched_digest_blocks=tdig,
         requantized_rows=int(requant_rows.size),
-        fingerprint=new_fp, version=new_plan.version)
+        fingerprint=new_fp, version=new_plan.version,
+        quant_drift=float(quant_drift),
+        requant_refreshed=requant_refreshed)

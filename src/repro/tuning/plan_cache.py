@@ -86,7 +86,13 @@ _ENV_DISK_MAX = "REPRO_PLAN_CACHE_DISK_MAX"
 #: gained ``block_digests`` + ``version`` for incremental plan maintenance
 #: (``repro.tuning.incremental``) — v4 entries were keyed by the old flat
 #: hash and can never be hit under the new keys, so they are rejected.
-PLAN_SCHEMA_VERSION = 5
+#: v6: blocked entries gained the row layout (``layout`` + the stored
+#: ``perm`` array for degree-sorted plans) and the quantization drift
+#: statistic ``quant_drift``; the cache key/filename gained a layout
+#: component for non-natural layouts.  A v5 entry re-read as v6 would be
+#: served as a natural-order plan even when its operand was permuted, so
+#: v5 entries are rejected.
+PLAN_SCHEMA_VERSION = 6
 
 _DEFAULT_MAX_PLANS = 64
 
@@ -182,6 +188,21 @@ class BlockedPlan:
     atomic tmp+rename disk write makes each patched version a single
     all-or-nothing swap, so a concurrent loader sees version N or N+1,
     never a torn mix.
+
+    ``layout`` is the *requested* row layout the plan was tuned under
+    ("natural" | "degree_sorted" | "auto") and is part of the cache key —
+    two layouts of the same graph coexist.  ``perm`` (when set) maps
+    permuted row position -> natural row id; the BlockELL was stitched over
+    the permuted CSR and the executor restores natural order via
+    ``inv_perm()`` on the output.  ``perm=None`` means natural order (an
+    "auto" tune that picked natural stores no perm).  Fingerprint and
+    block digests are always computed over the *natural*-order CSR, so a
+    layout change never moves the key's fingerprint component.
+
+    ``quant_drift`` accumulates the worst observed feature-range drift
+    (``quantization.range_drift``) across incremental patches; past
+    ``quantization.DRIFT_THRESHOLD`` the patch path re-derives the
+    quantization range instead of clipping to the stored one.
     """
 
     bell: BlockELL
@@ -196,12 +217,38 @@ class BlockedPlan:
     shard_meta: Optional[tuple] = None  # (mesh_shape, shard_idx, num_shards)
     block_digests: tuple = ()       # DIGEST_BLOCK_ROWS-granularity CSR digests
     version: int = 0                # bumped by each apply_edge_updates patch
+    layout: str = "natural"         # requested layout (part of the cache key)
+    perm: Optional[np.ndarray] = None   # permuted position -> natural row id
+    quant_drift: float = 0.0        # worst observed feature-range drift
 
     kind = "block"
 
     @property
     def block_rows(self) -> int:
         return self.bell.block_rows
+
+    @property
+    def row_layout(self) -> str:
+        """The *resolved* layout of the stitched operand ("natural" |
+        "degree_sorted") — an ``layout="auto"`` tune that picked natural
+        resolves to "natural" here."""
+        return "natural" if self.perm is None else "degree_sorted"
+
+    def inv_perm(self):
+        """Device-resident inverse permutation (natural row ``r`` lives at
+        permuted position ``inv_perm()[r]``), or None for natural-order
+        plans.  Memoized on the instance — ``dataclasses.replace`` drops
+        the memo along with the instance, which is exactly right."""
+        if self.perm is None:
+            return None
+        cached = getattr(self, "_inv_perm_cache", None)
+        if cached is None:
+            perm = np.asarray(self.perm, np.int64)
+            inv = np.empty_like(perm)
+            inv[perm] = np.arange(perm.size, dtype=np.int64)
+            cached = jnp.asarray(inv.astype(np.int32))
+            object.__setattr__(self, "_inv_perm_cache", cached)
+        return cached
 
     def block_configs(self) -> list[tuple[str, int]]:
         """Per-block (strategy, width) — the stitched tuning decisions."""
@@ -276,10 +323,15 @@ class PlanCache:
         self.stats = CacheStats()
 
     @staticmethod
-    def _key(fingerprint: str, kind: str, shard_meta=None) -> str:
+    def _key(fingerprint: str, kind: str, shard_meta=None,
+             layout: str = "natural") -> str:
         shard_meta = normalize_shard_meta(shard_meta)
         tag = "" if shard_meta is None else f"|{_shard_tag(shard_meta)}"
-        return f"{fingerprint}|{kind}{tag}"
+        # natural keeps the legacy key format so existing entries and every
+        # pre-layout call site key identically; other layouts get their own
+        # namespace (two layouts of one graph coexist side by side)
+        ly = "" if layout == "natural" else f"|ly:{layout}"
+        return f"{fingerprint}|{kind}{tag}{ly}"
 
     def _insert(self, key: str, plan: AnyPlan) -> None:
         self._mem[key] = plan
@@ -290,13 +342,15 @@ class PlanCache:
     # -- lookup ----------------------------------------------------------
 
     def get(self, fingerprint: str, kind: str = "global",
-            shard_meta=None) -> Optional[AnyPlan]:
+            shard_meta=None, layout: str = "natural") -> Optional[AnyPlan]:
         """Fetch the ``kind`` ("global" | "block") plan for a fingerprint;
         None on a miss.  ``shard_meta`` selects a per-shard serving plan
         (``(mesh_shape, shard_idx, num_shards)``); None means the
-        whole-graph plan.  Hits refresh LRU recency."""
+        whole-graph plan.  ``layout`` selects the row layout the plan was
+        *requested* under ("natural" | "degree_sorted" | "auto" — blocked
+        plans only).  Hits refresh LRU recency."""
         shard_meta = normalize_shard_meta(shard_meta)
-        key = self._key(fingerprint, kind, shard_meta)
+        key = self._key(fingerprint, kind, shard_meta, layout)
         with obs.trace("plan_cache.get", kind=kind) as sp:
             plan = self._mem.get(key)
             if plan is not None:
@@ -306,7 +360,7 @@ class PlanCache:
                 sp.set(tier="memory")
                 return plan
             if self.cache_dir is not None:
-                plan = self._load_disk(fingerprint, kind, shard_meta)
+                plan = self._load_disk(fingerprint, kind, shard_meta, layout)
                 if plan is not None:
                     self._insert(key, plan)
                     self.stats.hits += 1
@@ -324,7 +378,8 @@ class PlanCache:
                        disk=self.cache_dir is not None):
             obs.count("plan_cache.put")
             self._insert(
-                self._key(plan.fingerprint, plan.kind, plan.shard_meta), plan)
+                self._key(plan.fingerprint, plan.kind, plan.shard_meta,
+                          getattr(plan, "layout", "natural")), plan)
             if self.cache_dir is not None:
                 self._save_disk(plan)
 
@@ -377,10 +432,13 @@ class PlanCache:
     # -- disk tier -------------------------------------------------------
 
     def _path(self, fingerprint: str, kind: str = "global",
-              shard_meta=None) -> Path:
+              shard_meta=None, layout: str = "natural") -> Path:
         shard = "" if shard_meta is None else f".{_shard_tag(shard_meta)}"
+        # natural keeps the legacy filename; other layouts add a component
+        # so both layouts of one graph persist side by side
+        ly = "" if layout == "natural" else f".ly-{layout}"
         suffix = ".npz" if kind == "global" else ".block.npz"
-        return self.cache_dir / f"{fingerprint}{shard}{suffix}"
+        return self.cache_dir / f"{fingerprint}{shard}{ly}{suffix}"
 
     @staticmethod
     def _shard_meta_json(shard_meta):
@@ -414,6 +472,8 @@ class PlanCache:
                                        for u in plan.measured_bucket_us],
                 "block_digests": list(plan.block_digests),
                 "version": int(plan.version),
+                "layout": plan.layout,
+                "quant_drift": float(plan.quant_drift),
             }
             arrays = {
                 "bell_val": np.asarray(plan.bell.val),
@@ -423,6 +483,8 @@ class PlanCache:
                 "meta": np.frombuffer(
                     json.dumps(meta).encode(), dtype=np.uint8),
             }
+            if plan.perm is not None:
+                arrays["perm"] = np.asarray(plan.perm, np.int64)
             if plan.quantized is not None:
                 arrays["q"] = np.asarray(plan.quantized.q)
                 arrays["q_minmax"] = np.asarray(
@@ -454,7 +516,8 @@ class PlanCache:
                 arrays["q_minmax"] = np.asarray(
                     [float(plan.quantized.x_min), float(plan.quantized.x_max)],
                     np.float32)
-        path = self._path(plan.fingerprint, plan.kind, shard_meta)
+        path = self._path(plan.fingerprint, plan.kind, shard_meta,
+                          getattr(plan, "layout", "natural"))
         # np.savez appends ".npz" to names lacking it — keep the tmp name
         # ending in ".npz" so the atomic rename target is what was written.
         tmp = path.with_name(path.name + ".tmp.npz")
@@ -485,8 +548,9 @@ class PlanCache:
                 pass  # racing process already collected it
 
     def _load_disk(self, fingerprint: str, kind: str = "global",
-                   shard_meta=None) -> Optional[AnyPlan]:
-        path = self._path(fingerprint, kind, shard_meta)
+                   shard_meta=None, layout: str = "natural"
+                   ) -> Optional[AnyPlan]:
+        path = self._path(fingerprint, kind, shard_meta, layout)
         if not path.exists():
             return None
         try:
@@ -506,6 +570,8 @@ class PlanCache:
                 entry_sm = None if entry_sm is None \
                     else normalize_shard_meta(entry_sm)
                 if entry_sm != shard_meta:
+                    return None
+                if meta.get("layout", "natural") != layout:
                     return None
                 quantized = None
                 if meta.get("quant_bits") is not None:
@@ -541,7 +607,11 @@ class PlanCache:
                         shard_meta=shard_meta,
                         block_digests=tuple(
                             str(d) for d in meta.get("block_digests", [])),
-                        version=int(meta.get("version", 0)))
+                        version=int(meta.get("version", 0)),
+                        layout=str(meta.get("layout", "natural")),
+                        perm=(np.asarray(z["perm"], np.int64)
+                              if "perm" in z.files else None),
+                        quant_drift=float(meta.get("quant_drift", 0.0)))
                     self._touch(path)
                     return plan
                 ell = ELL(jnp.asarray(z["ell_val"]), jnp.asarray(z["ell_col"]),

@@ -5,8 +5,9 @@ jax and Pallas backends, the fused AES kernel, BlockELL with width-bucketed
 launches, the fused-dequant quantized paths, the sharded serving engine
 (loop and spmd), the async continuous-batching ``ServingRuntime``,
 the tuned ``strategy="auto"`` entry points, the unified
-``repro.exec.PlanExecutor`` dispatch (global / blocked / plan), and the
-fused Pallas layer kernel — against
+``repro.exec.PlanExecutor`` dispatch (global / blocked / plan), the
+fused Pallas layer kernel, and the degree-sorted row-reordered plans
+(blocked and fused, with the inverse-permutation output epilogue) — against
 the ``kernels/ref.py`` oracles (and, where coverage is exact, the dense
 ground truth) on a shared set of adversarial graphs: an empty graph, a
 graph with empty rows, a single dense row amid a sparse tail, and a ragged
@@ -557,6 +558,75 @@ def _path_fused_layer(name):
         err_msg="executor-jax")
 
 
+def _path_reordered_block(name):
+    """Degree-sorted BlockELL plans: ``tune_blocked(layout="degree_sorted")``
+    permutes rows for tuning/storage but the executor's inverse-permutation
+    epilogue must hand back natural-order output — equal to the dense ground
+    truth and bit-identical to the natural-layout plan (zero-padded slots
+    aggregate exactly, so row placement cannot move a single bit)."""
+    from repro.exec import default_executor
+    from repro.tuning.autotune import tune_blocked
+
+    g, x, want = _case(name)
+    tk = _exact_tune_kwargs(g, block_rows=16, measure_buckets=False)
+    nat = tune_blocked(g, x, cache=None, **tk)
+    srt = tune_blocked(g, x, cache=None, layout="degree_sorted", **tk)
+    assert srt.row_layout == "degree_sorted" and srt.perm is not None
+    assert nat.row_layout == "natural" and nat.perm is None
+    # fingerprints are always over the natural-order CSR: layout is a cache
+    # key dimension, never a graph identity change
+    assert srt.fingerprint == nat.fingerprint
+    _close(srt.run(x), want, rtol=1e-4, atol=1e-4, label="sorted-vs-dense")
+    np.testing.assert_array_equal(
+        np.asarray(srt.run(x)), np.asarray(nat.run(x)),
+        err_msg="sorted-vs-natural-bitexact")
+    ex = default_executor()
+    np.testing.assert_array_equal(
+        np.asarray(ex.run_plan(srt, x)), np.asarray(srt.run(x)),
+        err_msg="executor-vs-plan.run")
+    # the epilogue is a pure output gather: undoing it must recover the
+    # permuted-layout kernel output exactly
+    raw = ex.run_block(srt.bell, x, backend=srt.backend,
+                       quantized=srt.quantized, buckets=srt.buckets)
+    np.testing.assert_array_equal(
+        np.asarray(raw)[np.asarray(srt.inv_perm())],
+        np.asarray(srt.run(x)), err_msg="epilogue-is-inv-perm-gather")
+
+
+def _path_reordered_fused(name):
+    """The fused layer kernel over a degree-sorted ELL operand with the
+    executor's ``inv_perm`` epilogue: bit-identical to the natural-order
+    fused layer (same width, per-row content is position-independent), and
+    bit-identical to hand-applying the gather on the permuted output."""
+    from repro.exec import default_executor
+    from repro.core.graph import degree_sort_permutation
+
+    g, x, _ = _case(name)
+    rng = np.random.default_rng(zlib.crc32(name.encode()) + 2)
+    hidden = 5
+    w = jnp.asarray(rng.normal(size=(FEAT, hidden)).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=(hidden,)).astype(np.float32))
+    perm, inv, sorted_g = degree_sort_permutation(g)
+    inv = jnp.asarray(inv.astype(np.int32))
+    ex = default_executor()
+    width = _wmax(g) + 3      # covering: slot content is identical mod rows
+    ell_nat = sample(g, width, "full")
+    ell_srt = sample(sorted_g, width, "full")
+    for backend in ("pallas", "jax"):
+        got = ex.run_fused_layer(ell_srt, x, w, bias, relu=True,
+                                 backend=backend, inv_perm=inv)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(ex.run_fused_layer(ell_nat, x, w, bias, relu=True,
+                                          backend=backend)),
+            err_msg=f"{backend}-vs-natural")
+        raw = ex.run_fused_layer(ell_srt, x, w, bias, relu=True,
+                                 backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(raw)[np.asarray(inv)],
+            err_msg=f"{backend}-epilogue-gather")
+
+
 _PATHS = {
     "ell-jax-sampled": _path_ell_sampled_oracles,
     "ell-full": _path_ell_full,
@@ -578,6 +648,8 @@ _PATHS = {
     "executor-global": _path_executor_global,
     "executor-blocked": _path_executor_blocked,
     "fused-layer": _path_fused_layer,
+    "reordered-block": _path_reordered_block,
+    "reordered-fused": _path_reordered_fused,
 }
 
 

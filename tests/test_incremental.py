@@ -697,8 +697,102 @@ def test_server_patch_and_halo_growth(rng):
     np.testing.assert_allclose(np.asarray(srv.aggregate()), want2,
                                rtol=1e-4, atol=1e-4)
 
-    # deletions never force a re-tune (a stale halo id is wasted gather
-    # bandwidth, not a correctness problem)
+    # deletions re-tune only when they strand a halo column (the shard
+    # then compacts its gather set); plain deletions still patch in place
     del_edges = sorted(_edge_dict(final_g))[:3]
     rep3 = srv.apply_edge_updates((), del_edges)
-    assert rep3["retuned"] == []
+    assert set(rep3["halo_shrunk"]) <= set(rep3["retuned"])
+    final2_g, _ = apply_csr_deltas(final_g, (), del_edges)
+    want3 = np.asarray(csr_to_dense(final2_g)) @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(srv.aggregate()), want3,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_halo_shrinks_back_after_growth_then_delete(rng):
+    """Regression: deleting the only edge that referenced a grown halo
+    column must return the shard's halo (and its gather bytes) to the
+    pre-growth size — before the fix the halo only ever grew, so a
+    long-lived server leaked gather bandwidth on every transient edge."""
+    from repro.serving.engine import GNNServer
+
+    g = _dedup(random_csr(rng, 80, 3.0))
+    x = jnp.asarray(rng.normal(size=(80, 5)).astype(np.float32))
+    wmax = int(np.asarray(g.row_nnz()).max(initial=0)) + 2
+    tk = dict(block_rows=16, widths=(wmax, 2 * wmax), measure_plan=False,
+              measure_buckets=False)
+    srv = GNNServer(g, x, num_shards=2, mode="loop", cache=PlanCache(),
+                    tune_kwargs=tk)
+    sh0 = srv.shards[0]
+    pre_ids = np.asarray(sh0.halo_ids).copy()
+    pre_bytes = pre_ids.nbytes
+    halo = set(pre_ids.tolist())
+    local = set(range(sh0.row_start, sh0.row_stop))
+    out_col = next(c for c in range(79, -1, -1)
+                   if c not in halo and c not in local)
+    row = sh0.row_start
+
+    rep = srv.apply_edge_updates([(row, out_col)], ())
+    assert rep["retuned"] == [0]
+    grown = np.asarray(srv.shards[0].halo_ids)
+    assert grown.size == pre_ids.size + 1 and out_col in grown.tolist()
+
+    rep2 = srv.apply_edge_updates((), [(row, out_col)])
+    assert 0 in rep2["halo_shrunk"] and 0 in rep2["retuned"]
+    post_ids = np.asarray(srv.shards[0].halo_ids)
+    assert post_ids.nbytes == pre_bytes
+    assert np.array_equal(post_ids, pre_ids)
+    # and the round trip left the deployment serving the original graph
+    want = np.asarray(csr_to_dense(g)) @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(srv.aggregate()), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_requant_triggers_on_accumulated_drift(rng):
+    """Regression: features that drift *inside* the stored quantization
+    range used to be re-encoded against the stale grid forever, silently
+    losing resolution as the live distribution shrank.  Past the drift
+    threshold the patch must now derive a fresh range, and the fresh
+    encoding must beat the stale one on reconstruction error."""
+    from repro.core.quantization import (DRIFT_THRESHOLD, dequantize,
+                                         range_drift, requantize_rows)
+
+    g = _dedup(random_csr(rng, 96, 4.0))
+    x = rng.normal(size=(96, 6)).astype(np.float32)
+    plan = tune_blocked(g, jnp.asarray(x), quant=8, cache=None, **_TK)
+    qf0 = plan.quantized
+    assert qf0 is not None and plan.quant_drift == 0.0
+
+    # shrink every feature towards the mean: stays strictly inside the
+    # stored [x_min, x_max] but the live span collapses to 30%
+    x2 = (x - x.mean()) * 0.3 + x.mean()
+    assert range_drift(qf0, x2) > DRIFT_THRESHOLD
+    eset, c = set(_edge_dict(g)), 0
+    while (1, c) in eset:
+        c += 1
+    patched, _, report = apply_edge_updates(
+        plan, g, [(1, c)], (), widths=_TK["widths"], features=x2,
+        requant_rows=np.arange(96))
+    assert report.requant_refreshed
+    assert patched.quant_drift == 0.0
+    qf1 = patched.quantized
+    # the refreshed grid actually covers the live distribution tightly...
+    assert float(qf1.x_max) - float(qf1.x_min) \
+        < 0.5 * (float(qf0.x_max) - float(qf0.x_min))
+    # ...and reconstructs the drifted features strictly better than
+    # re-encoding on the stale grid would have
+    stale = requantize_rows(qf0, np.arange(96), x2)
+    err_fresh = np.abs(np.asarray(dequantize(qf1)) - x2).max()
+    err_stale = np.abs(np.asarray(dequantize(stale)) - x2).max()
+    assert err_fresh < err_stale
+
+    # below the threshold nothing refreshes: the stored range is kept
+    x3 = x * 0.95
+    plan2 = tune_blocked(g, jnp.asarray(x), quant=8, cache=None,
+                         refresh=True, **_TK)
+    assert range_drift(plan2.quantized, x3) <= DRIFT_THRESHOLD
+    patched2, _, rep2 = apply_edge_updates(
+        plan2, g, [(1, c)], (), widths=_TK["widths"], features=x3,
+        requant_rows=np.arange(96))
+    assert not rep2.requant_refreshed
+    assert float(patched2.quantized.x_min) == float(plan2.quantized.x_min)
+    assert patched2.quant_drift > 0.0

@@ -1,0 +1,307 @@
+"""Degree-sorted row reordering (ISSUE 10 tentpole).
+
+The permutation layer behind ``tune_blocked(layout=...)``:
+
+  * **Permutation primitives** — ``degree_sort_permutation`` /
+    ``permute_csr_rows`` unit tests: stable nnz-descending order,
+    ``perm``/``inv_perm`` are mutual inverses, row payloads move intact
+    (columns untouched, so features never reindex), round trip restores
+    the original CSR byte-for-byte.
+  * **Bit-exact outputs** — hypothesis drives random feature matrices
+    over the conformance harness's four adversarial graphs: the
+    degree-sorted plan's output must equal the natural plan's output
+    bit-for-bit (the epilogue is a pure gather and zero-padded slots
+    aggregate exactly, so row placement cannot move a single bit).
+  * **Evolving reordered plans** — the ``tests/corpus/`` delta streams
+    replay against degree-sorted plans (frozen perm, touched-row remap
+    through ``inv_perm``), plus a seeded random search persisting new
+    failures to the same corpus; patched reordered output must match
+    both the dense ground truth and the natural-layout patched plan.
+  * **Cache layout keys** — both layouts of one graph coexist under one
+    fingerprint (schema v6: the layout is a key dimension), survive a
+    disk round trip with the perm intact, and never cross-serve.
+  * **Auto layout** — ties go to natural; a bimodal hub-per-block graph
+    must pick degree_sorted (hubs pack into few wide blocks).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.graph import (apply_csr_deltas, csr_from_edges,
+                              csr_to_dense, degree_sort_permutation,
+                              permute_csr_rows)
+from repro.tuning import PlanCache
+from repro.tuning.autotune import tune_blocked
+
+from conftest import random_csr
+from test_incremental import _dedup, _fingerprint, _interpret_stream
+
+CORPUS_DIR = Path(__file__).parent / "corpus"
+
+_TK = dict(block_rows=16, include_full=True, measure_plan=False,
+           measure_buckets=False)
+
+
+def _covering_tk(*graphs, **over):
+    w = max((int(np.asarray(g.row_nnz()).max(initial=0)) for g in graphs),
+            default=1) or 1
+    tk = dict(_TK, widths=(w, 2 * w))
+    tk.update(over)
+    return tk
+
+
+# ---------------------------------------------------------------------------
+# permutation primitives
+# ---------------------------------------------------------------------------
+
+def test_degree_sort_is_stable_and_invertible(rng):
+    g = random_csr(rng, 120, 5.0, skew=0.8)
+    perm, inv, sorted_g = degree_sort_permutation(g)
+    rp = np.asarray(g.row_ptr, np.int64)
+    nnz = rp[1:] - rp[:-1]
+    snnz = nnz[perm]
+    assert (np.diff(snnz) <= 0).all()                  # nnz-descending
+    for d in np.unique(snnz):                          # stable within ties
+        tied = perm[snnz == d]
+        assert (np.diff(tied) > 0).all()
+    assert np.array_equal(inv[perm], np.arange(120))
+    assert np.array_equal(perm[inv], np.arange(120))
+    # position p of the sorted CSR holds natural row perm[p], payload
+    # intact (and columns untouched: num_cols is preserved)
+    srp = np.asarray(sorted_g.row_ptr, np.int64)
+    ci, sci = np.asarray(g.col_ind), np.asarray(sorted_g.col_ind)
+    v, sv = np.asarray(g.val), np.asarray(sorted_g.val)
+    for p in range(120):
+        r = int(perm[p])
+        assert np.array_equal(sci[srp[p]:srp[p + 1]], ci[rp[r]:rp[r + 1]])
+        assert np.array_equal(sv[srp[p]:srp[p + 1]], v[rp[r]:rp[r + 1]])
+    assert sorted_g.num_cols == g.num_cols
+    assert int(srp[-1]) == g.nnz
+
+
+def test_permute_round_trip_is_byte_identical(rng):
+    g = random_csr(rng, 77, 4.0, skew=0.6)
+    perm, inv, sorted_g = degree_sort_permutation(g)
+    back = permute_csr_rows(sorted_g, inv)
+    assert np.asarray(back.row_ptr).tobytes() == \
+        np.asarray(g.row_ptr).tobytes()
+    assert np.asarray(back.col_ind).tobytes() == \
+        np.asarray(g.col_ind).tobytes()
+    assert np.asarray(back.val).tobytes() == np.asarray(g.val).tobytes()
+
+
+def test_degree_sort_on_empty_graph():
+    g = csr_from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64), 10)
+    perm, inv, sorted_g = degree_sort_permutation(g)
+    assert np.array_equal(perm, np.arange(10))         # stable: identity
+    assert np.array_equal(inv, np.arange(10))
+    assert sorted_g.nnz == 0 and sorted_g.num_rows == 10
+
+
+# ---------------------------------------------------------------------------
+# tuned plans: layout plumbing + bit-exact outputs
+# ---------------------------------------------------------------------------
+
+def _conformance_graph(name):
+    from test_conformance import _GRAPHS
+    return _GRAPHS[name]()
+
+
+def test_layout_validation_and_plan_fields(rng):
+    g = _dedup(random_csr(rng, 60, 4.0))
+    x = jnp.asarray(rng.normal(size=(60, 4)).astype(np.float32))
+    tk = _covering_tk(g)
+    with pytest.raises(ValueError, match="layout"):
+        tune_blocked(g, x, cache=None, layout="sideways", **tk)
+    nat = tune_blocked(g, x, cache=None, refresh=True, **tk)
+    srt = tune_blocked(g, x, cache=None, refresh=True,
+                       layout="degree_sorted", **tk)
+    assert nat.layout == "natural" and nat.perm is None
+    assert nat.row_layout == "natural" and nat.inv_perm() is None
+    assert srt.layout == "degree_sorted" and srt.perm is not None
+    assert srt.row_layout == "degree_sorted"
+    # layout is a cache-key dimension, never a graph-identity change
+    assert srt.fingerprint == nat.fingerprint == _fingerprint(g)
+    inv = np.asarray(srt.inv_perm())
+    assert np.array_equal(np.asarray(srt.perm)[inv], np.arange(60))
+
+
+@given(name=st.sampled_from(["empty", "empty_rows", "dense_row",
+                             "ragged70"]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+def test_property_reordered_output_bit_equals_natural(name, seed):
+    """perm then inv_perm round-trips every output bit: for any feature
+    matrix, the degree-sorted plan and the natural plan agree exactly —
+    and, under covering widths, with the dense ground truth."""
+    g = _conformance_graph(name)
+    feat_rng = np.random.default_rng(seed)
+    x = jnp.asarray(feat_rng.normal(size=(g.num_rows, 6))
+                    .astype(np.float32))
+    tk = _covering_tk(g)
+    nat = tune_blocked(g, x, cache=None, refresh=True, **tk)
+    srt = tune_blocked(g, x, cache=None, refresh=True,
+                       layout="degree_sorted", **tk)
+    got_n, got_s = np.asarray(nat.run(x)), np.asarray(srt.run(x))
+    np.testing.assert_array_equal(got_s, got_n)
+    want = np.asarray(csr_to_dense(g)) @ np.asarray(x)
+    np.testing.assert_allclose(got_s, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# evolving reordered plans: corpus replay + seeded fuzz
+# ---------------------------------------------------------------------------
+
+def _run_reorder_case(case: dict) -> None:
+    """Replay one delta-stream case against a degree-sorted plan: the
+    perm stays frozen across patches, the fingerprint rolls with the
+    natural-order graph, and the output matches both the dense ground
+    truth and the natural-layout plan patched with the same stream."""
+    from repro.tuning.incremental import apply_edge_updates
+
+    rng = np.random.default_rng(case["seed"])
+    g = _dedup(random_csr(rng, case["num_nodes"], case["avg_deg"]))
+    x = jnp.asarray(np.random.default_rng(1)
+                    .normal(size=(g.num_rows, 4)).astype(np.float32))
+    pairs = [tuple(p) for p in case["pairs"]]
+    chunks, sim, states = [], g, [g]
+    for start in range(0, len(pairs), 6):
+        chunk = _interpret_stream(sim, pairs[start:start + 6])
+        chunks.append(chunk)
+        sim, _ = apply_csr_deltas(sim, *chunk)
+        states.append(sim)
+    tk = _covering_tk(*states)
+
+    srt = tune_blocked(g, x, cache=None, refresh=True,
+                       layout="degree_sorted", **tk)
+    nat = tune_blocked(g, x, cache=None, refresh=True, **tk)
+    perm0 = np.asarray(srt.perm).copy()
+    cur_s = cur_n = g
+    for adds, dels in chunks:
+        srt, cur_s, _ = apply_edge_updates(srt, cur_s, adds, dels,
+                                           widths=tk["widths"], features=x)
+        nat, cur_n, _ = apply_edge_updates(nat, cur_n, adds, dels,
+                                           widths=tk["widths"], features=x)
+    assert np.array_equal(np.asarray(srt.perm), perm0)   # frozen
+    assert srt.fingerprint == _fingerprint(cur_s) == nat.fingerprint
+    got = np.asarray(srt.run(x))
+    np.testing.assert_array_equal(got, np.asarray(nat.run(x)))
+    want = np.asarray(csr_to_dense(cur_s)) @ np.asarray(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_reorder_corpus_replay():
+    """The CSR-delta fuzz corpus replays against reordered plans first —
+    any stream that ever broke the delta layer must also keep a frozen
+    perm honest before the randomized search starts."""
+    assert CORPUS_DIR.is_dir()
+    for path in sorted(CORPUS_DIR.glob("delta-*.json")):
+        _run_reorder_case(json.loads(path.read_text()))
+
+
+def test_reorder_fuzz_random_streams():
+    """Seeded random delta streams against degree-sorted plans; failures
+    persist to ``tests/corpus/`` in the shared schema, so both this
+    replay and the CSR-invariant one pick them up on every later run."""
+    master = np.random.default_rng(20260810)
+    for _ in range(6):
+        case = {
+            "seed": int(master.integers(0, 2**31)),
+            "num_nodes": int(master.integers(8, 60)),
+            "avg_deg": float(master.uniform(0.5, 5.0)),
+            "pairs": [[int(master.integers(0, 4096)),
+                       int(master.integers(0, 4096))]
+                      for _ in range(int(master.integers(0, 18)))],
+        }
+        try:
+            _run_reorder_case(case)
+        except Exception:
+            blob = json.dumps(case, sort_keys=True)
+            tag = hashlib.sha1(blob.encode()).hexdigest()[:12]
+            CORPUS_DIR.mkdir(exist_ok=True)
+            (CORPUS_DIR / f"delta-{tag}.json").write_text(blob + "\n")
+            raise
+
+
+# ---------------------------------------------------------------------------
+# cache: layouts coexist under one fingerprint, disk round trip
+# ---------------------------------------------------------------------------
+
+def test_cache_keys_layouts_independently(rng, tmp_path):
+    g = _dedup(random_csr(rng, 80, 4.0))
+    x = jnp.asarray(rng.normal(size=(80, 5)).astype(np.float32))
+    tk = _covering_tk(g)
+    cache = PlanCache(cache_dir=tmp_path / "both")
+    nat = tune_blocked(g, x, cache=cache, **tk)
+    srt = tune_blocked(g, x, cache=cache, layout="degree_sorted", **tk)
+    assert nat.fingerprint == srt.fingerprint
+    assert len(cache.plans()) == 2
+
+    # a fresh instance (another process in spirit) restores both layouts
+    fresh = PlanCache(cache_dir=tmp_path / "both")
+    l_nat = fresh.get(nat.fingerprint, "block")
+    l_srt = fresh.get(srt.fingerprint, "block", layout="degree_sorted")
+    assert l_nat is not None and l_nat.perm is None
+    assert l_srt is not None and l_srt.row_layout == "degree_sorted"
+    np.testing.assert_array_equal(np.asarray(l_srt.perm),
+                                  np.asarray(srt.perm))
+    np.testing.assert_array_equal(np.asarray(l_srt.run(x)),
+                                  np.asarray(l_nat.run(x)))
+
+    # a sorted-only cache never serves the natural lookup (and vice
+    # versa): the layout is part of the key, not a fallback chain
+    sonly = PlanCache(cache_dir=tmp_path / "sorted-only")
+    tune_blocked(g, x, cache=sonly, layout="degree_sorted", **tk)
+    reload = PlanCache(cache_dir=tmp_path / "sorted-only")
+    assert reload.get(srt.fingerprint, "block") is None
+    assert reload.get(srt.fingerprint, "block",
+                      layout="degree_sorted") is not None
+
+
+# ---------------------------------------------------------------------------
+# auto layout
+# ---------------------------------------------------------------------------
+
+def test_auto_layout_uniform_degrees_stay_natural(rng):
+    """Equal degrees: sorting is a no-op permutation, costs tie, and the
+    tie must go to natural (no epilogue gather for free)."""
+    rows = 64
+    dst = np.repeat(np.arange(rows), 3)
+    src = (dst + np.tile(np.arange(3), rows)) % rows   # exactly 3 nnz/row
+    g = csr_from_edges(src, dst, rows)
+    x = jnp.asarray(rng.normal(size=(rows, 4)).astype(np.float32))
+    plan = tune_blocked(g, x, cache=None, refresh=True, layout="auto",
+                        **_covering_tk(g))
+    assert plan.row_layout == "natural" and plan.perm is None
+
+
+def test_auto_layout_bimodal_hubs_get_sorted(rng):
+    """One hub per 16-row block: every natural block pads to the hub
+    width, while sorting packs all hubs into one block — auto must take
+    the degree-sorted layout and still match the dense ground truth."""
+    rows = 128
+    hub_rows = np.arange(0, rows, 16)
+    dst = np.concatenate([np.repeat(hub_rows, 60),
+                          np.repeat(np.arange(rows), 2)])
+    src = np.random.default_rng(5).integers(0, rows, dst.shape[0])
+    g = _dedup(csr_from_edges(src, dst, rows))
+    x = jnp.asarray(rng.normal(size=(rows, 4)).astype(np.float32))
+    tk = _covering_tk(g, strategies=(), widths=(1,))  # candidates: full only
+    plan = tune_blocked(g, x, cache=None, refresh=True, layout="auto", **tk)
+    assert plan.row_layout == "degree_sorted"
+    want = np.asarray(csr_to_dense(g)) @ np.asarray(x)
+    np.testing.assert_allclose(np.asarray(plan.run(x)), want,
+                               rtol=1e-4, atol=1e-4)
+    # the sorted slot budget is genuinely tighter: hub width is paid once
+    nat = tune_blocked(g, x, cache=None, refresh=True, **tk)
+    slots = lambda p: int(np.asarray(p.bell.val).size)  # noqa: E731
+    assert slots(plan) < slots(nat)

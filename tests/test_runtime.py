@@ -302,6 +302,26 @@ def test_telemetry_records_stages_and_batches(rng):
     assert tel.snapshot()["counters"]["submitted"] == 0
 
 
+def test_snapshot_includes_obs_counters(rng):
+    """Regression: ``ServingRuntime.snapshot()`` reported only its own
+    queue/latency state — the process-wide ``repro.obs`` counters (executor
+    dispatches, sampler calls, cache hits) were invisible to anyone polling
+    the runtime.  One merged dict now carries both."""
+    from repro import obs
+
+    obs.reset()
+    g, x, server = _server(rng)          # tuning bumps the sampler counters
+    with ServingRuntime(server, max_batch=2, max_delay_ms=5.0) as rt:
+        rt.submit().result(30)           # serving bumps the executor ones
+        snap = rt.snapshot()
+    assert "obs" in snap and "counters" in snap["obs"]
+    names = snap["obs"]["counters"]
+    assert any(k.startswith("executor.") for k in names), sorted(names)
+    assert any(k.startswith("sampler.") for k in names), sorted(names)
+    # the runtime's own telemetry is still there, un-shadowed
+    assert snap["counters"]["completed"] == 1
+
+
 # ---------------------------------------------------------------------------
 # traffic
 # ---------------------------------------------------------------------------
